@@ -1,0 +1,64 @@
+"""Fault-tolerance what-ifs on the system model (paper Sec. 4.1 hooks).
+
+Uses the FaultInjector hook + collective-deadline detection to quantify:
+  * straggler amplification: one chip at kx slowdown -> whole-step cost
+    (the collective barrier makes it global — the paper's lesson);
+  * failure detection latency: how long until survivors observe a
+    collective timeout after a chip dies;
+  * checkpoint-overhead trade-off: optimal checkpoint interval per MTBF
+    (Young's approximation) for the measured step/save times.
+"""
+from __future__ import annotations
+
+import math
+import sys
+
+from repro.core import SystemSpec, simulate, what_if_failure, \
+    what_if_straggler
+from repro.core.hlo import CollectiveRecord, HloCost, TraceOp
+
+
+def _workload(n_devices: int, layers: int = 16) -> HloCost:
+    cost = HloCost()
+    groups = [list(range(n_devices))]
+    for i in range(layers):
+        cost.trace.append(TraceOp("compute", f"seg{i}", flops=2e10,
+                                  hbm_bytes=5e8))
+        rec = CollectiveRecord("all-reduce", f"ar{i}", 5e7, int(5e7),
+                               int(5e7), groups)
+        cost.collectives.append(rec)
+        cost.trace.append(TraceOp("collective", f"ar{i}", collective=rec))
+    return cost
+
+
+def main() -> int:
+    spec = SystemSpec(pod_shape=(4, 4))
+    cost = _workload(16)
+    print("name,us_per_call,derived")
+
+    base = simulate(cost=cost, spec=spec, device_limit=None)
+    print(f"step_base,{base.time_s * 1e6:.1f},util={base.compute_util:.2f}")
+    for k in (1.5, 2.0, 4.0):
+        _, slow = what_if_straggler(cost, spec, device=5, slow_factor=k,
+                                    device_limit=None)
+        print(f"straggler_x{k},{slow.time_s * 1e6:.1f},"
+              f"amplification={slow.time_s / base.time_s:.2f}")
+
+    rep = what_if_failure(cost, spec, device=3, fail_at_s=0.0,
+                          deadline_s=base.time_s / 4, device_limit=None)
+    print(f"failure_detect,{rep.time_s * 1e6:.1f},"
+          f"timeouts={rep.collective_timeouts}"
+          f"|aborted={rep.devices_aborted}")
+
+    # Young's optimal checkpoint interval for measured costs
+    step_s = base.time_s
+    save_s = 30.0                      # sharded ckpt write (measured class)
+    for mtbf_h in (6.0, 24.0):
+        interval = math.sqrt(2 * save_s * mtbf_h * 3600)
+        print(f"ckpt_interval_mtbf{mtbf_h:.0f}h,"
+              f"{interval:.0f},steps={interval / step_s:.0f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

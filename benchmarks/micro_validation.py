@@ -1,0 +1,88 @@
+"""Fig. 6 analog — micro-benchmarks isolating ONE model parameter each.
+
+The paper fits/validates per-component latencies (ALU pipeline, L1/L2/
+DRAM) with micro-kernels.  Our system model's parameters are the TPU
+chip constants; each micro-benchmark builds a minimal synthetic trace
+that exerces exactly one parameter and checks the simulated time against
+the closed-form expectation:
+
+  mxu_staircase   op-launch overhead + MXU FLOP rate (ALU analog)
+  hbm_latency     HBM bandwidth occupancy (DRAM analog)
+  ici_hop         single collective-permute hop (L1/L2 hit analog)
+  ring_allreduce  full ring formula (memory-hierarchy traversal analog)
+  dcn_crosspod    cross-pod DCN latency + bandwidth
+
+Prints name,us_per_call,derived CSV (derived = analytic expectation;
+sim must match within 1%).
+"""
+from __future__ import annotations
+
+import sys
+
+from repro.core import SystemSpec, simulate
+from repro.core.hlo import CollectiveRecord, HloCost, TraceOp
+
+
+def _sim_compute(flops, nbytes, spec):
+    cost = HloCost(trace=[TraceOp("compute", "op", flops=flops,
+                                  hbm_bytes=nbytes)])
+    return simulate(cost=cost, spec=spec, device_limit=1).time_s
+
+
+def _sim_collective(kind, nbytes, group, spec):
+    rec = CollectiveRecord(kind, "c", nbytes, int(nbytes), int(nbytes),
+                           [group])
+    cost = HloCost(collectives=[rec],
+                   trace=[TraceOp("collective", "c", collective=rec)])
+    return simulate(cost=cost, spec=spec, device_limit=None).time_s
+
+
+def rows():
+    spec = SystemSpec(pod_shape=(4, 4), num_pods=2)
+    c = spec.chip
+    out = []
+
+    # 1) MXU staircase: time vs flops is launch_overhead + flops/peak
+    for flops in (1e9, 4e9, 16e9):
+        t = _sim_compute(flops, 0.0, spec)
+        expect = c.op_launch_overhead_s + flops / c.peak_bf16_flops
+        out.append((f"mxu_{flops:.0e}flop", t * 1e6, expect * 1e6))
+
+    # 2) HBM occupancy
+    for nbytes in (1e8, 8e8):
+        t = _sim_compute(1.0, nbytes, spec)
+        expect = c.op_launch_overhead_s + nbytes / c.hbm_bandwidth
+        out.append((f"hbm_{nbytes:.0e}B", t * 1e6, expect * 1e6))
+
+    # 3) single ICI hop (collective-permute)
+    t = _sim_collective("collective-permute", 1e6, [0, 1], spec)
+    expect = 1e6 / c.ici_link_bandwidth + c.ici_hop_latency_s
+    out.append(("ici_hop_1MB", t * 1e6, expect * 1e6))
+
+    # 4) ring all-reduce over an x ring
+    n, B = 4, 1e7
+    t = _sim_collective("all-reduce", B, [0, 1, 2, 3], spec)
+    expect = 2 * (n - 1) / n * B / (2 * c.ici_link_bandwidth) \
+        + 2 * (n - 1) * c.ici_hop_latency_s
+    out.append(("ring_ar_10MB", t * 1e6, expect * 1e6))
+
+    # 5) cross-pod pair over DCN
+    t = _sim_collective("all-reduce", 1e7, [0, 16], spec)
+    assert t >= c.dcn_latency_s
+    expect = 1e7 / spec.dcn_bandwidth_per_pod + c.dcn_latency_s
+    out.append(("dcn_pair_10MB", t * 1e6, expect * 1e6))
+    return out
+
+
+def main() -> int:
+    print("name,us_per_call,derived_us")
+    worst = 0.0
+    for name, got, expect in rows():
+        print(f"{name},{got:.3f},{expect:.3f}")
+        worst = max(worst, abs(got - expect) / max(expect, 1e-9))
+    print(f"# max relative error vs closed form: {100 * worst:.3f}%")
+    return 0 if worst < 0.01 else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

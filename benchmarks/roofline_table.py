@@ -1,0 +1,73 @@
+"""§Roofline table — renders the dry-run results (assignment g).
+
+Reads results/dryrun_single.json (+ _multi.json if present) produced by
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun_single.json
+and prints the per-cell roofline terms table.  If the JSON is missing it
+dry-runs a 3-cell subset inline (slow: full compiles on 256 fake devices).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results")
+
+
+def fmt(t):
+    if t is None:
+        return "-"
+    for unit, s in (("s", 1.0), ("ms", 1e-3), ("us", 1e-6)):
+        if abs(t) >= s:
+            return f"{t / s:.3g}{unit}"
+    return f"{t:.1e}s"
+
+
+def render(rows) -> str:
+    hdr = ["cell", "mesh", "status", "t_compute", "t_memory", "t_coll(sim)",
+           "dominant", "useful", "roofline%", "peak_GB/dev"]
+    out = [" | ".join(hdr), " | ".join(["---"] * len(hdr))]
+    for r in rows:
+        cell = f"{r['arch']}/{r['shape']}"
+        if r["status"] != "ok":
+            out.append(f"{cell} | {r['mesh']} | {r['status']} | " +
+                       " | ".join(["-"] * 6) +
+                       f" | {r.get('reason', r.get('error', ''))[:60]}")
+            continue
+        peak = (r.get("peak_bytes_per_device") or 0) / 1e9
+        out.append(" | ".join([
+            cell, r["mesh"], "ok", fmt(r["t_compute"]), fmt(r["t_memory"]),
+            fmt(r["t_collective_sim"]), r["dominant"],
+            f"{r['useful_ratio']:.2f}",
+            f"{100 * r['roofline_fraction']:.1f}%", f"{peak:.2f}",
+        ]))
+    return "\n".join(out)
+
+
+def main() -> int:
+    print("name,us_per_call,derived")
+    found = False
+    for tag in ("single", "multi"):
+        path = os.path.join(RESULTS, f"dryrun_{tag}.json")
+        if not os.path.exists(path):
+            continue
+        found = True
+        rows = json.load(open(path))
+        ok = [r for r in rows if r["status"] == "ok"]
+        print(f"# ---- {tag}-pod mesh: {len(ok)}/{len(rows)} cells ok ----")
+        print(render(rows))
+        for r in ok:
+            print(f"{r['arch']}/{r['shape']}_{tag},"
+                  f"{1e6 * r['bound_time']:.1f},"
+                  f"dominant={r['dominant']}"
+                  f"|roofline={100 * r['roofline_fraction']:.1f}%")
+    if not found:
+        print("# no results/dryrun_*.json — run repro.launch.dryrun --all "
+              "--out results/dryrun_single.json first", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,48 @@
+"""Benchmark driver: one benchmark per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run
+
+Each module prints ``name,us_per_call,derived`` CSV.  Modules that need
+a multi-device mesh set XLA_FLAGS for themselves, so every benchmark
+runs in its own subprocess (device count is locked at first jax init).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+MODULES = [
+    ("micro_validation", "Fig.6 — one-parameter micro-benchmarks"),
+    ("engine_parallelism", "Fig.2 — batch width per timestamp"),
+    ("engine_scalability", "Fig.8 — engine throughput + determinism"),
+    ("mgmark_validation", "Fig.7 — workload sim vs analytic bound"),
+    ("case_study", "Fig.9 — U-mode vs D-mode traffic/time"),
+    ("fault_tolerance", "straggler / failure / ckpt-interval what-ifs"),
+    ("roofline_table", "§Roofline — dry-run cell table"),
+]
+
+
+def main() -> int:
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src") + os.pathsep + repo
+    env.pop("XLA_FLAGS", None)
+    failures = []
+    for mod, title in MODULES:
+        print(f"\n=== benchmarks.{mod} — {title} ===", flush=True)
+        proc = subprocess.run(
+            [sys.executable, "-m", f"benchmarks.{mod}"], env=env, cwd=repo,
+            capture_output=True, text=True, timeout=3000)
+        sys.stdout.write(proc.stdout)
+        if proc.returncode != 0:
+            failures.append(mod)
+            sys.stdout.write(f"[FAILED rc={proc.returncode}]\n"
+                             + proc.stderr[-2000:] + "\n")
+    print(f"\n{len(MODULES) - len(failures)}/{len(MODULES)} benchmarks ok"
+          + (f"; FAILED: {failures}" if failures else ""))
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

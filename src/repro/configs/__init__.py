@@ -1,0 +1,18 @@
+"""Assigned architecture configs (one module per arch, per assignment).
+
+Importing this package populates the model registry; use
+``repro.models.get_config(name)`` / ``list_archs()`` or the ``--arch``
+flag on the launchers.
+"""
+from . import (qwen2_1_5b, internlm2_20b, qwen1_5_4b, qwen1_5_110b,
+               whisper_base, dbrx_132b, qwen3_moe_30b, llava_next_34b,
+               mamba2_1_3b, zamba2_7b)
+from .shapes import SHAPES, ShapeCell, cell_applicable, input_specs, \
+    cache_specs, tokens_in_cell
+
+ASSIGNED = ["qwen2-1.5b", "internlm2-20b", "qwen1.5-4b", "qwen1.5-110b",
+            "whisper-base", "dbrx-132b", "qwen3-moe-30b-a3b",
+            "llava-next-34b", "mamba2-1.3b", "zamba2-7b"]
+
+__all__ = ["SHAPES", "ShapeCell", "cell_applicable", "input_specs",
+           "cache_specs", "tokens_in_cell", "ASSIGNED"]

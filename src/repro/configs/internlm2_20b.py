@@ -1,0 +1,21 @@
+"""internlm2-20b [dense] — GQA. [arXiv:2403.17297; hf]"""
+from repro.models.base import ModelConfig, register
+
+
+@register("internlm2-20b")
+def internlm2_20b() -> ModelConfig:
+    return ModelConfig(
+        name="internlm2-20b", family="dense",
+        num_layers=48, d_model=6144, num_heads=48, num_kv_heads=8,
+        d_ff=16_384, vocab_size=92_544,
+        rope_theta=1e6, fsdp=True, attn_impl="ref", microbatches=2,
+        seq_shard_activations=True,
+    )
+
+
+@register("internlm2-20b-smoke")
+def internlm2_20b_smoke() -> ModelConfig:
+    return internlm2_20b().replace(
+        name="internlm2-20b-smoke", num_layers=2, d_model=64, num_heads=8,
+        num_kv_heads=2, d_ff=128, vocab_size=256, dtype="float32", microbatches=1, fsdp=False,
+        seq_shard_activations=False, attn_impl="ref")

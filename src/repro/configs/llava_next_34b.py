@@ -1,0 +1,27 @@
+"""llava-next-34b [vlm] — anyres tiling STUB + dense 60L backbone.
+[hf:llava-hf/llava-v1.6-mistral-7b-hf]
+
+input_specs() provides precomputed patch embeddings (B, 2880, d_model):
+anyres = 4 tiles + base image, 576 CLIP patches each. The vision tower
+and 2-layer MLP projector are out of assignment scope (stub).
+"""
+from repro.models.base import ModelConfig, register
+
+
+@register("llava-next-34b")
+def llava_next_34b() -> ModelConfig:
+    return ModelConfig(
+        name="llava-next-34b", family="vlm",
+        num_layers=60, d_model=7168, num_heads=56, num_kv_heads=8,
+        d_ff=20_480, vocab_size=64_000,
+        num_patches=2880, rope_theta=5e6, attn_impl="ref", microbatches=2,
+        fsdp=True, seq_shard_activations=True,
+    )
+
+
+@register("llava-next-34b-smoke")
+def llava_next_34b_smoke() -> ModelConfig:
+    return llava_next_34b().replace(
+        name="llava-next-34b-smoke", num_layers=2, d_model=64, num_heads=8,
+        num_kv_heads=2, d_ff=128, vocab_size=256, num_patches=8,
+        dtype="float32", microbatches=1, fsdp=False, seq_shard_activations=False)

@@ -1,0 +1,20 @@
+"""qwen1.5-110b [dense] — GQA kv=8, QKV bias. [hf:Qwen/Qwen1.5-0.5B; hf]"""
+from repro.models.base import ModelConfig, register
+
+
+@register("qwen1.5-110b")
+def qwen1_5_110b() -> ModelConfig:
+    return ModelConfig(
+        name="qwen1.5-110b", family="dense",
+        num_layers=80, d_model=8192, num_heads=64, num_kv_heads=8,
+        d_ff=49_152, vocab_size=152_064, qkv_bias=True,
+        fsdp=True, seq_shard_activations=True, attn_impl="ref", microbatches=2,
+    )
+
+
+@register("qwen1.5-110b-smoke")
+def qwen1_5_110b_smoke() -> ModelConfig:
+    return qwen1_5_110b().replace(
+        name="qwen1.5-110b-smoke", num_layers=3, d_model=64, num_heads=8,
+        num_kv_heads=2, d_ff=256, vocab_size=256, dtype="float32", microbatches=1,
+        fsdp=False, seq_shard_activations=False)

@@ -1,0 +1,21 @@
+"""qwen2-1.5b [dense] — GQA, QKV bias. [arXiv:2407.10671; hf]"""
+from repro.models.base import ModelConfig, register
+
+
+@register("qwen2-1.5b")
+def qwen2_1_5b() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-1.5b", family="dense",
+        num_layers=28, d_model=1536, num_heads=12, num_kv_heads=2,
+        d_ff=8960, vocab_size=151_936, qkv_bias=True,
+        rope_theta=1e6, attn_impl="blocked",
+        seq_shard_activations=True, fsdp=True,
+    )
+
+
+@register("qwen2-1.5b-smoke")
+def qwen2_1_5b_smoke() -> ModelConfig:
+    return qwen2_1_5b().replace(
+        name="qwen2-1.5b-smoke", num_layers=2, d_model=64, num_heads=4,
+        num_kv_heads=2, d_ff=128, vocab_size=256, dtype="float32",
+        seq_shard_activations=False, fsdp=False, attn_impl="ref")

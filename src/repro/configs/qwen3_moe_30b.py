@@ -1,0 +1,29 @@
+"""qwen3-moe-30b-a3b [moe] — 128 experts top-8. [hf:Qwen/Qwen3-30B-A3B; hf]
+
+Qwen3 uses an explicit head_dim=128 (num_heads*head_dim != d_model).
+d_ff=768 is the per-expert intermediate size.
+"""
+from repro.models.base import ModelConfig, register
+
+
+@register("qwen3-moe-30b-a3b")
+def qwen3_moe_30b() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-moe-30b-a3b", family="moe",
+        num_layers=48, d_model=2048, num_heads=32, num_kv_heads=4,
+        head_dim=128, d_ff=768, vocab_size=151_936,
+        num_experts=128, experts_per_token=8, moe_groups=256,
+        rope_theta=1e6, fsdp=True, attn_impl="ref", microbatches=2,
+        seq_shard_activations=True,
+    )
+
+
+@register("qwen3-moe-30b-a3b-smoke")
+def qwen3_moe_30b_smoke() -> ModelConfig:
+    return qwen3_moe_30b().replace(
+        name="qwen3-moe-30b-a3b-smoke", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, head_dim=16, d_ff=32, vocab_size=256,
+        num_experts=8, experts_per_token=2, capacity_factor=8.0,
+        moe_groups=4,
+        dtype="float32", microbatches=1, fsdp=False, seq_shard_activations=False,
+        attn_impl="ref")

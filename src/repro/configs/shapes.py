@@ -1,0 +1,97 @@
+"""Assigned input shapes and ShapeDtypeStruct builders (dry-run inputs).
+
+Four shape cells per architecture (assignment):
+    train_4k     seq 4,096    global_batch 256   -> train_step
+    prefill_32k  seq 32,768   global_batch 32    -> prefill
+    decode_32k   seq 32,768   global_batch 128   -> serve_step (1 new token)
+    long_500k    seq 524,288  global_batch 1     -> serve_step; SSM/hybrid only
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs — shardable,
+zero allocation — for every model input of a cell, exactly the
+shannon/kernels dry-run pattern the assignment references.
+"""
+from __future__ import annotations
+
+import dataclasses
+import typing
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str        # "train" | "prefill" | "decode"
+
+
+SHAPES: typing.Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+
+def cell_applicable(cfg: ModelConfig, cell: ShapeCell) -> typing.Tuple[bool, str]:
+    """long_500k needs sub-quadratic attention (SSM/hybrid only)."""
+    if cell.name == "long_500k" and not cfg.supports_long_context:
+        return False, ("full-attention arch: 512k-KV decode is "
+                       "quadratic/memory-infeasible; skipped per assignment")
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """ShapeDtypeStruct stand-ins for the *data* inputs of one cell.
+
+    For decode cells the per-token input is the token ids; the KV cache is
+    part of the carried state and its specs come from ``cache_specs``.
+    """
+    B, S = cell.global_batch, cell.seq_len
+    tok = jnp.int32
+    if cell.kind == "train":
+        batch = {"tokens": _sds((B, S), tok), "targets": _sds((B, S), tok)}
+        if cfg.family == "vlm":
+            text = S - cfg.num_patches
+            batch = {"tokens": _sds((B, text), tok),
+                     "targets": _sds((B, text), tok),
+                     "patches": _sds((B, cfg.num_patches, cfg.d_model),
+                                     cfg.jnp_dtype)}
+        if cfg.family == "encdec":
+            batch["frames"] = _sds((B, cfg.encoder_seq, cfg.d_model),
+                                   cfg.jnp_dtype)
+        return batch
+    if cell.kind == "prefill":
+        batch = {"tokens": _sds((B, S), tok)}
+        if cfg.family == "vlm":
+            batch = {"tokens": _sds((B, S - cfg.num_patches), tok),
+                     "patches": _sds((B, cfg.num_patches, cfg.d_model),
+                                     cfg.jnp_dtype)}
+        if cfg.family == "encdec":
+            batch["frames"] = _sds((B, cfg.encoder_seq, cfg.d_model),
+                                   cfg.jnp_dtype)
+        return batch
+    # decode: one new token against a seq_len-deep cache
+    return {"token": _sds((B,), tok)}
+
+
+def cache_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """ShapeDtypeStructs for the KV/SSM cache at this cell's depth."""
+    from repro.models import api
+    cache = jax.eval_shape(
+        lambda: api.init_cache(cfg, cell.global_batch, cell.seq_len))
+    return cache
+
+
+def tokens_in_cell(cfg: ModelConfig, cell: ShapeCell) -> int:
+    if cell.kind == "decode":
+        return cell.global_batch          # one new token per sequence
+    return cell.global_batch * cell.seq_len

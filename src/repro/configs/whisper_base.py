@@ -1,0 +1,24 @@
+"""whisper-base [audio] — enc-dec, conv frontend STUB. [arXiv:2212.04356]
+
+input_specs() provides precomputed frame embeddings (B, 1500, 512); the
+conv1d+mel frontend is out of assignment scope.
+"""
+from repro.models.base import ModelConfig, register
+
+
+@register("whisper-base")
+def whisper_base() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-base", family="encdec",
+        num_layers=6, encoder_layers=6, d_model=512, num_heads=8,
+        num_kv_heads=8, d_ff=2048, vocab_size=51_865,
+        encoder_seq=1500, attn_impl="ref", microbatches=2,
+    )
+
+
+@register("whisper-base-smoke")
+def whisper_base_smoke() -> ModelConfig:
+    return whisper_base().replace(
+        name="whisper-base-smoke", num_layers=2, encoder_layers=2,
+        d_model=64, num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=256,
+        encoder_seq=16, dtype="float32", microbatches=1)

@@ -1,0 +1,42 @@
+"""MGSim-TPU: the paper's simulator core, adapted to multi-pod TPU systems.
+
+Four subsystems per paper Sec 4.1 — events, components, request/connection,
+hooks — plus the TPU adaptation layers: chip/topology/system models, the
+machine-level HLO analyzer (DP-1), the trace builder and the timeline
+simulator + roofline report the assignment's perf loop runs on.
+"""
+from .event import Event, EventQueue
+from .engine import Engine
+from .component import Component, Port
+from .connection import Connection, LinkConnection, LimitedConnection, Request
+from .hooks import (Hook, HookCtx, Hookable, Tracer, MetricsHook, StallHook,
+                    FaultInjector, EVENT_START, EVENT_END, REQ_SEND,
+                    REQ_DELIVER, BUSY_INTERVAL)
+from .hw import ChipSpec, SystemSpec, SINGLE_POD, MULTI_POD, DTYPE_BYTES, s_to_ps, ps_to_s
+from .topology import Topology, parse_replica_groups
+from .chip import TensorCore, HbmController, ComputeJob
+from .system import System, DeviceProgram, CollectiveCoordinator
+from .hlo import HloModule, HloCost, CollectiveRecord, analyze
+from .trace import build_runops
+from .simulate import SimReport, simulate, what_if_straggler, what_if_failure
+from .roofline import (RooflineTerms, build_terms, collective_sim_time,
+                       model_flops_train, model_flops_prefill,
+                       model_flops_decode, attention_flops, format_table)
+
+__all__ = [
+    "Event", "EventQueue", "Engine", "Component", "Port",
+    "Connection", "LinkConnection", "LimitedConnection", "Request",
+    "Hook", "HookCtx", "Hookable", "Tracer", "MetricsHook", "StallHook",
+    "FaultInjector", "EVENT_START", "EVENT_END", "REQ_SEND", "REQ_DELIVER",
+    "BUSY_INTERVAL",
+    "ChipSpec", "SystemSpec", "SINGLE_POD", "MULTI_POD", "DTYPE_BYTES",
+    "s_to_ps", "ps_to_s",
+    "Topology", "parse_replica_groups",
+    "TensorCore", "HbmController", "ComputeJob",
+    "System", "DeviceProgram", "CollectiveCoordinator",
+    "HloModule", "HloCost", "CollectiveRecord", "analyze", "build_runops",
+    "SimReport", "simulate", "what_if_straggler", "what_if_failure",
+    "RooflineTerms", "build_terms", "collective_sim_time",
+    "model_flops_train", "model_flops_prefill", "model_flops_decode",
+    "attention_flops", "format_table",
+]

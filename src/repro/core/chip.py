@@ -1,0 +1,84 @@
+"""TPU chip components: TensorCore + HBM controller.
+
+These mirror the paper's CU / cache / memory-controller components, at
+the granularity XLA actually schedules: fused ops.  A fused op occupies
+the TensorCore for ``max(flops/peak, hbm_bytes/bw) + launch_overhead``
+(the roofline duration), reports the HBM traffic to the HBM controller
+via a request (so HBM occupancy is observable), and answers the
+requesting DeviceProgram when done.
+
+Stragglers: the FaultInjector hook sets ``fault_slow_factor`` (read here,
+mutated nowhere else) -- compute durations stretch, and collectives that
+include this chip stretch with it.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .component import Component
+from .connection import Request
+from .event import Event
+from .hw import ChipSpec, s_to_ps
+
+
+@dataclasses.dataclass
+class ComputeJob:
+    flops: float
+    hbm_bytes: float
+    dtype_bits: int = 16
+    tag: str = "compute"
+    reply_to: object = None     # DeviceProgram
+    token: object = None
+
+
+class TensorCore(Component):
+    def __init__(self, name: str, spec: ChipSpec) -> None:
+        super().__init__(name)
+        self.spec = spec
+        self.busy_until_ps = 0
+        self.total_flops = 0.0
+
+    def duration_ps(self, job: ComputeJob) -> int:
+        peak = self.spec.flops_for_dtype(job.dtype_bits) / self.fault_slow_factor
+        t_compute = job.flops / peak
+        t_mem = job.hbm_bytes / self.spec.hbm_bandwidth
+        return s_to_ps(max(t_compute, t_mem) + self.spec.op_launch_overhead_s)
+
+    def handle(self, event: Event) -> None:
+        if event.kind == "request":
+            job: ComputeJob = event.payload.payload
+            start = max(self.engine.now, self.busy_until_ps)
+            end = start + self.duration_ps(job)
+            self.busy_until_ps = end
+            self.total_flops += job.flops
+            self.mark_busy(start, end, job.tag)
+            # tell HBM about the traffic (observable occupancy, DP-4)
+            if "hbm" in self.ports and job.hbm_bytes:
+                self.port("hbm").send(Request(
+                    src=self.port("hbm"), dst=None, kind="traffic",
+                    size_bytes=int(job.hbm_bytes)))
+            self.schedule("job_done", end - self.engine.now, payload=job)
+        elif event.kind == "job_done":
+            job: ComputeJob = event.payload
+            self.port("prog").send(Request(
+                src=self.port("prog"), dst=job.reply_to, kind="compute_done",
+                payload=job.token))
+
+
+class HbmController(Component):
+    """Tracks HBM occupancy from TensorCore traffic requests."""
+
+    def __init__(self, name: str, spec: ChipSpec) -> None:
+        super().__init__(name)
+        self.spec = spec
+        self.bytes_total = 0
+        self.busy_until_ps = 0
+
+    def handle(self, event: Event) -> None:
+        if event.kind == "request":
+            req: Request = event.payload
+            self.bytes_total += req.size_bytes
+            start = max(self.engine.now, self.busy_until_ps)
+            end = start + s_to_ps(req.size_bytes / self.spec.hbm_bandwidth)
+            self.busy_until_ps = end
+            self.mark_busy(start, end, "hbm")

@@ -1,0 +1,82 @@
+"""Component system (paper Sec. 4.1, part 2).
+
+Every simulated entity is a :class:`Component`: a TPU TensorCore, an HBM
+controller, an ICI router, a collective coordinator, ...  Strict state
+encapsulation is the core design rule (DP-2/DP-3):
+
+* a component's state is mutated **only** inside its own ``handle``;
+* a component may only schedule events **for itself**
+  (:meth:`Component.schedule` hard-codes ``component=self``);
+* all inter-component communication goes through
+  :class:`repro.core.connection.Connection` objects via ``Request``s.
+
+There is deliberately **no** registry of "other components" on a
+component -- it holds only :class:`Port` handles, so it is impossible to
+reach across and poke another component's state ("no magic").
+"""
+from __future__ import annotations
+
+import typing
+
+from .event import Event
+from .hooks import Hookable
+
+
+class Port:
+    """One endpoint of a connection, owned by a single component."""
+
+    def __init__(self, owner: "Component", name: str) -> None:
+        self.owner = owner
+        self.name = name
+        self.connection = None  # wired by Connection.plug
+
+    def send(self, request) -> bool:
+        if self.connection is None:
+            raise RuntimeError(f"port {self.owner.name}.{self.name} is not wired")
+        return self.connection.send(self, request)
+
+    def can_send(self) -> bool:
+        return self.connection is not None and self.connection.can_accept(self)
+
+
+class Component(Hookable):
+    def __init__(self, name: str) -> None:
+        super().__init__()
+        self.name = name
+        self.engine = None          # set by Engine.register
+        self.rank = 0               # set by Engine.register (deterministic)
+        self.ports: dict = {}
+        # Fault-injection inputs (written by FaultInjector hook, read here):
+        self.fault_failed = False
+        self.fault_slow_factor = 1.0
+
+    # -- wiring -----------------------------------------------------------
+    def port(self, name: str) -> Port:
+        if name not in self.ports:
+            self.ports[name] = Port(self, name)
+        return self.ports[name]
+
+    # -- scheduling (self only) -------------------------------------------
+    def schedule(self, kind: str, delay_ps: int = 0, payload: typing.Any = None) -> None:
+        """Schedule an event for *this* component ``delay_ps`` in the future."""
+        assert delay_ps >= 0, "cannot schedule into the past"
+        self.engine.post(Event(time=self.engine.now + delay_ps,
+                               component=self, kind=kind, payload=payload))
+
+    # -- behaviour ---------------------------------------------------------
+    def handle(self, event: Event) -> None:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def notify_available(self, connection) -> None:
+        """Called by a capacity-limited connection when it frees up (DP-6:
+        components never poll; they are notified).  Default: no-op."""
+
+    # -- convenience --------------------------------------------------------
+    def mark_busy(self, start_ps: int, end_ps: int, tag: str) -> None:
+        """Report a busy interval to hooks (metrics / utilization)."""
+        self.invoke_hooks("busy_interval", end_ps, (self, start_ps, end_ps, tag))
+        if self.engine is not None:
+            self.engine.invoke_hooks("busy_interval", end_ps, (self, start_ps, end_ps, tag))
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"<{type(self).__name__} {self.name}>"

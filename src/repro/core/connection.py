@@ -1,0 +1,152 @@
+"""Request-connection system (paper Sec. 4.1, part 3).
+
+Components communicate exclusively by sending :class:`Request` objects
+over :class:`Connection` objects.  Connections model the transport --
+on-chip fabric (zero/fixed latency), ICI links (latency + serialization
+bandwidth + occupancy) and DCN (high latency, pod-aggregate bandwidth).
+
+A connection is itself an engine-registered entity so that deliveries are
+ordinary events: the connection schedules a ``deliver`` event addressed
+to itself, and on handling it invokes the destination component's
+``handle`` with a ``request`` event.  This keeps every state change on
+the event timeline (DP-3/DP-4) and lets hooks observe all traffic.
+
+DP-6 (no busy ticking): :class:`LimitedConnection` has a bounded queue;
+when full, ``send`` returns ``False`` and the *connection* remembers the
+rejected sender, notifying it via ``notify_available`` when space frees
+-- senders never poll.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import typing
+
+from .event import Event
+from .hooks import Hookable, REQ_SEND, REQ_DELIVER
+from .hw import s_to_ps
+
+_req_ids = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    src: typing.Any            # Port
+    dst: typing.Any            # Component (resolved by the connection)
+    kind: str
+    size_bytes: int = 0
+    payload: typing.Any = None
+    rid: int = dataclasses.field(default_factory=lambda: next(_req_ids))
+
+
+class Connection(Hookable):
+    """Point/multi-point transport with fixed latency (on-chip fabric)."""
+
+    def __init__(self, name: str, latency_s: float = 0.0) -> None:
+        super().__init__()
+        self.name = name
+        self.latency_ps = s_to_ps(latency_s)
+        self.engine = None
+        self.rank = 0
+        self.endpoints: list = []
+
+    # -- wiring -------------------------------------------------------------
+    def plug(self, port) -> "Connection":
+        port.connection = self
+        self.endpoints.append(port)
+        return self
+
+    # -- protocol -----------------------------------------------------------
+    def can_accept(self, src_port) -> bool:
+        return True
+
+    def transfer_time_ps(self, request: Request) -> int:
+        return self.latency_ps
+
+    def _resolve_dst(self, src_port, request: Request) -> None:
+        """Point-to-point convenience: with exactly two endpoints the
+        destination is implied (requests stay addressed, components keep
+        zero references to peers)."""
+        if request.dst is None and len(self.endpoints) == 2:
+            a, b = self.endpoints
+            request.dst = b.owner if a is src_port else a.owner
+
+    def send(self, src_port, request: Request) -> bool:
+        self._resolve_dst(src_port, request)
+        self.invoke_hooks(REQ_SEND, self.engine.now, request)
+        self.engine.post(Event(time=self.engine.now + self.transfer_time_ps(request),
+                               component=self, kind="deliver", payload=request))
+        return True
+
+    # -- engine interface (connections are event handlers too) ---------------
+    def handle(self, event: Event) -> None:
+        if event.kind == "deliver":
+            request: Request = event.payload
+            self.invoke_hooks(REQ_DELIVER, self.engine.now, request)
+            self.engine.dispatch_request(request.dst, request)
+
+    def notify_available(self, connection) -> None:  # pragma: no cover
+        pass
+
+
+class LinkConnection(Connection):
+    """Bandwidth-limited, serialized link (one message at a time).
+
+    Transfer completes at ``max(now, busy_until) + latency + bytes/bw``.
+    Occupancy is tracked so MetricsHook can report per-link utilisation.
+    """
+
+    def __init__(self, name: str, bandwidth: float, latency_s: float = 0.0) -> None:
+        super().__init__(name, latency_s)
+        self.bandwidth = bandwidth           # bytes/s
+        self.busy_until_ps = 0
+        self.bytes_total = 0
+
+    def serialization_ps(self, size_bytes: int) -> int:
+        return s_to_ps(size_bytes / self.bandwidth) if self.bandwidth else 0
+
+    def send(self, src_port, request: Request) -> bool:
+        self._resolve_dst(src_port, request)
+        self.invoke_hooks(REQ_SEND, self.engine.now, request)
+        start = max(self.engine.now, self.busy_until_ps)
+        done = start + self.serialization_ps(request.size_bytes)
+        self.busy_until_ps = done
+        self.bytes_total += request.size_bytes
+        self.engine.post(Event(time=done + self.latency_ps,
+                               component=self, kind="deliver", payload=request))
+        return True
+
+
+class LimitedConnection(LinkConnection):
+    """LinkConnection with a bounded in-flight queue (DP-6 notification)."""
+
+    def __init__(self, name: str, bandwidth: float, latency_s: float = 0.0,
+                 capacity: int = 4) -> None:
+        super().__init__(name, bandwidth, latency_s)
+        self.capacity = capacity
+        self.in_flight = 0
+        self._waiting: list = []   # rejected sender components, FIFO
+
+    def can_accept(self, src_port) -> bool:
+        return self.in_flight < self.capacity
+
+    def send(self, src_port, request: Request) -> bool:
+        if self.in_flight >= self.capacity:
+            # reject and remember who to notify -- the sender must NOT retry
+            # every cycle; it will get a notify_available callback.
+            if src_port.owner not in self._waiting:
+                self._waiting.append(src_port.owner)
+            return False
+        self.in_flight += 1
+        return super().send(src_port, request)
+
+    def handle(self, event: Event) -> None:
+        if event.kind == "deliver":
+            self.in_flight -= 1
+            super().handle(event)
+            # wake exactly one waiter per freed slot, deterministically FIFO
+            if self._waiting and self.in_flight < self.capacity:
+                waiter = self._waiting.pop(0)
+                waiter.notify_available(self)
+        else:  # pragma: no cover
+            super().handle(event)

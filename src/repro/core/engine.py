@@ -1,0 +1,133 @@
+"""Event-driven simulation engine with conservative parallel execution.
+
+Serial mode processes events strictly in ``(time, component_rank, seq)``
+order.  Parallel mode implements the paper's conservative scheme (DP-5):
+all events sharing the earliest timestamp are grouped by component, the
+groups are executed concurrently (a component's state is only touched by
+its own group), and newly produced events are committed in a
+deterministic order afterwards.  The result is **bit-identical** to
+serial execution -- the property MGSim insists on, and which
+``tests/test_sim_engine.py`` asserts.
+
+Batch widths (events per timestamp) are recorded so we can report the
+Fig. 2 analog: how much parallelism a conservative engine can exploit.
+"""
+from __future__ import annotations
+
+import collections
+import concurrent.futures
+import threading
+import typing
+
+from .event import Event, EventQueue
+from .hooks import Hookable, EVENT_START, EVENT_END
+
+
+class Engine(Hookable):
+    def __init__(self, parallel: bool = False, max_workers: int = 4) -> None:
+        super().__init__()
+        self.queue = EventQueue()
+        self.now = 0
+        self.parallel = parallel
+        self.max_workers = max_workers
+        self._components: list = []
+        self._in_batch = False
+        self._pending: list = []           # (creator_rank, creation_idx, event)
+        self._creation_idx = 0
+        self._pending_lock = threading.Lock()
+        self.events_processed = 0
+        self.batch_widths: list = []       # Fig. 2 analog data
+        self._pool = None
+
+    # -- registration ---------------------------------------------------------
+    def register(self, item) -> typing.Any:
+        """Register a component or connection; assigns deterministic rank."""
+        item.engine = self
+        item.rank = len(self._components)
+        self._components.append(item)
+        return item
+
+    # -- scheduling -------------------------------------------------------------
+    def post(self, event: Event) -> None:
+        assert event.time >= self.now, "cannot schedule into the past"
+        if self._in_batch:
+            with self._pending_lock:
+                idx = self._creation_idx
+                self._creation_idx += 1
+            self._pending.append((getattr(event.component, "rank", 0), idx, event))
+        else:
+            self.queue.push(event)
+
+    def dispatch_request(self, dst, request) -> None:
+        """Deliver a request to dst as an ordinary event (same timestamp)."""
+        self.post(Event(time=self.now, component=dst, kind="request",
+                        payload=request))
+
+    # -- execution ----------------------------------------------------------------
+    def _handle_one(self, event: Event) -> None:
+        comp = event.component
+        self.invoke_hooks(EVENT_START, self.now, event)
+        comp.invoke_hooks(EVENT_START, self.now, event)
+        if not getattr(comp, "fault_failed", False):
+            comp.handle(event)
+        comp.invoke_hooks(EVENT_END, self.now, event)
+        self.invoke_hooks(EVENT_END, self.now, event)
+        self.events_processed += 1
+
+    def _run_batch(self, batch: list) -> None:
+        """Execute one same-timestamp batch (conservative parallelism)."""
+        groups = collections.defaultdict(list)
+        for ev in batch:
+            groups[getattr(ev.component, "rank", 0)].append(ev)
+        ordered_ranks = sorted(groups)
+        self.batch_widths.append(len(batch))
+
+        self._in_batch = True
+        self._pending = []
+        self._creation_idx = 0
+
+        def run_group(rank):
+            for ev in groups[rank]:
+                self._handle_one(ev)
+
+        if self.parallel and len(ordered_ranks) > 1:
+            if self._pool is None:
+                self._pool = concurrent.futures.ThreadPoolExecutor(self.max_workers)
+            list(self._pool.map(run_group, ordered_ranks))
+        else:
+            for rank in ordered_ranks:
+                run_group(rank)
+
+        self._in_batch = False
+        # Commit new events in deterministic order regardless of thread
+        # interleaving: sort by (creator rank, event fields) -- creation_idx
+        # is thread-racy by design, so it must NOT drive ordering.
+        self._pending.sort(key=lambda t: (t[0], t[2].time, t[2].kind, _payload_key(t[2])))
+        for _, _, ev in self._pending:
+            self.queue.push(ev)
+        self._pending = []
+
+    def run(self, until_ps: int = None) -> int:
+        """Run until the queue drains (or past ``until_ps``); returns end time."""
+        while self.queue:
+            t = self.queue.peek_time()
+            if until_ps is not None and t > until_ps:
+                break
+            self.now = t
+            self._run_batch(self.queue.pop_batch())
+        if self._pool is not None:
+            self._pool.shutdown()
+            self._pool = None
+        return self.now
+
+
+def _payload_key(ev: Event):
+    """Stable tiebreaker for committing same-rank events."""
+    p = ev.payload
+    rid = getattr(p, "rid", None)
+    if rid is not None:
+        return (0, rid)
+    try:
+        return (1, hash(p) if p.__hash__ else 0)
+    except TypeError:
+        return (1, 0)

@@ -1,0 +1,78 @@
+"""Event system (paper Sec. 4.1, part 1).
+
+An :class:`Event` marks an update of system state at a particular time.
+The engine keeps a priority queue of events ordered by
+``(time, component_rank, seq)``:
+
+* ``time``            -- integer picoseconds (exact ordering, no float ties)
+* ``component_rank``  -- stable per-component rank, so same-timestamp events
+                         group deterministically by component (this grouping
+                         is the unit of conservative parallelism, DP-5)
+* ``seq``             -- global monotonically increasing schedule order
+
+Events carry an opaque ``kind`` + ``payload``; the owning component's
+``handle`` interprets them.  A component can only schedule events for
+itself (enforced in :meth:`Component.schedule`), mirroring MGSim's rule
+that "a component can only schedule events to itself".
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import typing
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    time: int                  # picoseconds
+    component: "typing.Any"    # the Component that will handle this event
+    kind: str
+    payload: typing.Any = None
+    seq: int = -1              # filled by the queue
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"Event(t={self.time}ps, {getattr(self.component, 'name', '?')}, {self.kind})"
+
+
+class EventQueue:
+    """Min-heap of events keyed (time, component_rank, seq)."""
+
+    def __init__(self) -> None:
+        self._heap: list = []
+        self._counter = itertools.count()
+
+    def push(self, event: Event) -> Event:
+        seq = next(self._counter)
+        event = dataclasses.replace(event, seq=seq)
+        rank = getattr(event.component, "rank", 0)
+        heapq.heappush(self._heap, (event.time, rank, seq, event))
+        return event
+
+    def pop(self) -> Event:
+        return heapq.heappop(self._heap)[-1]
+
+    def peek_time(self) -> int:
+        return self._heap[0][0]
+
+    def pop_batch(self) -> list:
+        """Pop *all* events sharing the earliest timestamp.
+
+        Those events are, by construction of the component system,
+        mutually independent across components: a handler may only touch
+        its own component's state.  This is the conservative-parallel
+        batch of DP-5.
+        """
+        if not self._heap:
+            return []
+        t = self._heap[0][0]
+        batch = []
+        while self._heap and self._heap[0][0] == t:
+            batch.append(self.pop())
+        return batch
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)

@@ -1,0 +1,552 @@
+"""HLO analyzer: parse ``compiled.as_text()`` into a machine-level cost model.
+
+This is the DP-1 ("simulate the machine-level program") piece of the
+adaptation: instead of GCN3 binaries we analyze the **post-SPMD,
+post-optimization XLA HLO module** -- the exact program a TPU core would
+execute.  We parse every computation, then walk the entry computation
+accumulating:
+
+* FLOPs (``dot``/``convolution`` exactly from shapes + contracting dims;
+  elementwise ops approximately as one FLOP/element);
+* HBM bytes: operand + output sizes of **top-level** (fusion-boundary)
+  instructions only -- fusion internals never touch HBM;
+* collectives: kind, payload bytes, materialized replica groups.
+
+Crucially, ``while`` loops are scaled by their inferred **trip count**
+(XLA's own ``cost_analysis`` counts loop bodies exactly once -- measured
+in this repo; see DESIGN.md -- which would undercount an 80-layer scanned
+transformer by 80x).  Trip counts are inferred from the loop condition
+``compare(iv, constant(N)), direction=LT`` pattern that jax.lax.scan /
+fori_loop always produce, combined with the induction-variable start
+value from the init tuple.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+import typing
+
+from .hw import DTYPE_BYTES
+from .topology import parse_replica_groups
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+# e.g. "bf16[32,64]{1,0}" or "f32[]" or "(f32[2]{0}, s32[])" or "u32[1]{0}"
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(r"\s*([\w\-]+)\((.*)$", re.S)
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*\{\s*$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _split_instruction(line: str):
+    """Split 'name = TYPE opcode(operands...), attrs' robustly.
+
+    TYPE may be a tuple '(a, b, ...)' (bracket-matched) possibly holding
+    '/*index=N*/' comments (already stripped by the caller) — a plain
+    regex over it breaks, which silently drops every multi-element
+    ``while`` op and loses all loop trip counts.
+    """
+    m = _NAME_RE.match(line)
+    if m is None:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    if rest.startswith("("):
+        depth = 0
+        for i, c in enumerate(rest):
+            if c == "(":
+                depth += 1
+            elif c == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        else:
+            return None
+        type_str, rest = rest[:i + 1], rest[i + 1:]
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str, rest = rest[:sp], rest[sp:]
+    m2 = _OPCODE_RE.match(rest)
+    if m2 is None:
+        return None
+    return name, type_str, m2.group(1), m2.group(2)
+
+
+@dataclasses.dataclass
+class Shape:
+    dtype: str
+    dims: typing.Tuple[int, ...]
+
+    @property
+    def numel(self) -> int:
+        n = 1
+        for d in self.dims:
+            n *= d
+        return n
+
+    @property
+    def bytes(self) -> int:
+        return self.numel * DTYPE_BYTES.get(self.dtype, 4)
+
+
+def parse_shapes(text: str) -> typing.List[Shape]:
+    """All array shapes in a type string (tuples yield several)."""
+    out = []
+    for m in _SHAPE_RE.finditer(text):
+        dtype = m.group(1)
+        if dtype not in DTYPE_BYTES:
+            continue
+        dims = tuple(int(d) for d in m.group(2).split(",") if d)
+        out.append(Shape(dtype, dims))
+    return out
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    opcode: str
+    shapes: typing.List[Shape]        # output shapes (tuple -> several)
+    operands: typing.List[str]
+    attrs: str
+    raw_operands: str = ""            # verbatim text inside opcode(...)
+
+    def constant_value(self) -> typing.Optional[int]:
+        if self.opcode != "constant":
+            return None
+        m = re.fullmatch(r"\s*(-?\d+)\s*", self.raw_operands)
+        return int(m.group(1)) if m else None
+
+    @property
+    def out_bytes(self) -> int:
+        return sum(s.bytes for s in self.shapes)
+
+    @property
+    def out_numel(self) -> int:
+        return sum(s.numel for s in self.shapes)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: typing.List[Instruction]
+    by_name: typing.Dict[str, Instruction]
+
+
+@dataclasses.dataclass
+class CollectiveRecord:
+    kind: str
+    op_name: str
+    payload_bytes: int          # B convention per topology.collective_time_s
+    operand_bytes: int
+    output_bytes: int
+    groups: typing.List[typing.List[int]]
+    count: float = 1.0          # scaled by while trip counts
+
+    @property
+    def group_size(self) -> int:
+        return len(self.groups[0]) if self.groups else 1
+
+
+@dataclasses.dataclass
+class TraceOp:
+    """One entry in the device-level op trace (program order)."""
+    kind: str                   # 'compute' | 'collective'
+    name: str
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective: CollectiveRecord = None
+    repeat: float = 1.0         # how many times this op executes (trip counts)
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collectives: typing.List[CollectiveRecord] = dataclasses.field(default_factory=list)
+    trace: typing.List[TraceOp] = dataclasses.field(default_factory=list)
+    unknown_trip_counts: int = 0
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(c.payload_bytes * c.count for c in self.collectives)
+
+    def collective_bytes_by_kind(self) -> dict:
+        out: dict = {}
+        for c in self.collectives:
+            out[c.kind] = out.get(c.kind, 0.0) + c.payload_bytes * c.count
+        return out
+
+
+# Opcodes that move no data / do no work at runtime
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "bitcast-convert",
+    "opt-barrier", "domain", "add-dependency", "custom-call",
+}
+# Control-flow / call-like
+_CALL_OPS = {"fusion", "call", "while", "conditional", "async-start"}
+
+
+class HloModule:
+    def __init__(self, text: str) -> None:
+        self.computations: typing.Dict[str, Computation] = {}
+        self.entry: str = None
+        self._parse(text)
+        self._cost_memo: dict = {}
+
+    # ------------------------------------------------------------------
+    def _parse(self, text: str) -> None:
+        cur_name, cur_entry, instrs = None, False, []
+        for line in text.splitlines():
+            if cur_name is None:
+                # computation headers sit at column 0 and end with "{";
+                # params may contain nested parens, so match loosely.
+                if (line and not line[0].isspace() and "->" in line
+                        and line.rstrip().endswith("{")):
+                    head = line.split("(", 1)[0].strip()
+                    cur_entry = head.startswith("ENTRY")
+                    cur_name = head.replace("ENTRY", "").strip().lstrip("%")
+                    instrs = []
+                continue
+            stripped = line.strip()
+            if stripped.startswith("}"):
+                comp = Computation(cur_name, instrs,
+                                   {i.name: i for i in instrs})
+                self.computations[cur_name] = comp
+                if cur_entry:
+                    self.entry = cur_name
+                cur_name = None
+                continue
+            split = _split_instruction(_COMMENT_RE.sub("", line))
+            if split is None:
+                continue
+            name, type_str, opcode, rest = split
+            # operands run until the matching close-paren of the opcode call
+            depth, idx = 1, 0
+            while idx < len(rest) and depth:
+                if rest[idx] == "(":
+                    depth += 1
+                elif rest[idx] == ")":
+                    depth -= 1
+                idx += 1
+            operand_str, attrs = rest[:idx - 1], rest[idx:]
+            operands = _OPERAND_RE.findall(operand_str)
+            instrs.append(Instruction(name, opcode, parse_shapes(type_str),
+                                      operands, attrs, raw_operands=operand_str))
+
+    # ------------------------------------------------------------------
+    def _called(self, instr: Instruction, key: str) -> str:
+        m = re.search(key + r"=%?([\w.\-]+)", instr.attrs)
+        return m.group(1) if m else None
+
+    def _operand_shape(self, comp: Computation, operand_name: str) -> typing.List[Shape]:
+        ins = comp.by_name.get(operand_name)
+        return ins.shapes if ins else []
+
+    def _dot_flops(self, comp: Computation, instr: Instruction) -> float:
+        lhs = self._operand_shape(comp, instr.operands[0])
+        if not lhs or not instr.shapes:
+            return 0.0
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.attrs)
+        cdims = [int(d) for d in m.group(1).split(",")] if m and m.group(1) else []
+        k = 1
+        for d in cdims:
+            if d < len(lhs[0].dims):
+                k *= lhs[0].dims[d]
+        return 2.0 * instr.out_numel * k
+
+    def _conv_flops(self, comp: Computation, instr: Instruction) -> float:
+        rhs = self._operand_shape(comp, instr.operands[1]) if len(instr.operands) > 1 else []
+        if not rhs or not instr.shapes:
+            return 0.0
+        m = re.search(r"dim_labels=\w*_(\w+)->", instr.attrs)
+        out_ch = 1
+        if m:
+            labels = m.group(1)
+            if "o" in labels and len(rhs[0].dims) == len(labels):
+                out_ch = rhs[0].dims[labels.index("o")]
+        per_out = rhs[0].numel / max(1, out_ch)
+        g = re.search(r"feature_group_count=(\d+)", instr.attrs)
+        groups = int(g.group(1)) if g else 1
+        return 2.0 * instr.out_numel * per_out / groups
+
+    def _chase(self, comp: Computation, name: str,
+               fusion_ctx) -> typing.Tuple[Computation, typing.Optional[Instruction]]:
+        """Follow copy/convert chains and parameter->fusion-operand links."""
+        ins = comp.by_name.get(name)
+        for _ in range(64):
+            if ins is None:
+                return comp, None
+            if ins.opcode in ("copy", "convert", "bitcast") and ins.operands:
+                ins = comp.by_name.get(ins.operands[0])
+                continue
+            if ins.opcode == "parameter" and fusion_ctx is not None:
+                outer_comp, fusion_ins = fusion_ctx
+                try:
+                    idx = int(ins.raw_operands.strip())
+                except ValueError:
+                    return comp, ins
+                if idx >= len(fusion_ins.operands):
+                    return comp, ins
+                comp, fusion_ctx = outer_comp, None
+                ins = comp.by_name.get(fusion_ins.operands[idx])
+                continue
+            return comp, ins
+        return comp, ins
+
+    def _find_loop_compare(self, cond: Computation):
+        """Locate compare(iv, constant) in the loop condition, looking
+        through one level of fusion (XLA wraps the compare in kLoop)."""
+        sites = [(cond, ins, None) for ins in cond.instructions
+                 if ins.opcode == "compare"]
+        for ins in cond.instructions:
+            if ins.opcode == "fusion":
+                callee = self.computations.get(self._called(ins, "calls"))
+                if callee:
+                    sites += [(callee, fin, (cond, ins))
+                              for fin in callee.instructions
+                              if fin.opcode == "compare"]
+        for site_comp, cmp_ins, fusion_ctx in sites:
+            d = re.search(r"direction=(\w+)", cmp_ins.attrs)
+            direction = d.group(1) if d else None
+            bound, iv_index = None, None
+            for op in cmp_ins.operands:
+                _, src = self._chase(site_comp, op, fusion_ctx)
+                if src is None:
+                    continue
+                if src.opcode == "constant" and src.constant_value() is not None:
+                    bound = src.constant_value()
+                elif src.opcode == "get-tuple-element":
+                    m = re.search(r"index=(\d+)", src.attrs)
+                    if m:
+                        iv_index = int(m.group(1))
+            if bound is not None and direction in ("LT", "GT", "LE", "GE", "NE"):
+                return bound, iv_index, direction
+        return None
+
+    def _infer_trip_count(self, instr: Instruction,
+                          comp: Computation) -> typing.Optional[float]:
+        """Trips of a ``while``: find ``compare(gte(iv), constant(N))`` in
+        the condition, then the induction start in the init tuple.
+        jax.lax.scan / fori_loop always lower to this shape."""
+        cond = self.computations.get(self._called(instr, "condition"))
+        if cond is None:
+            return None
+        found = self._find_loop_compare(cond)
+        if found is None:
+            return None
+        bound, iv_index, direction = found
+        start = 0
+        if iv_index is not None and instr.operands:
+            _, init = self._chase(comp, instr.operands[0], None)
+            if init is not None and init.opcode == "tuple" and iv_index < len(init.operands):
+                _, src = self._chase(comp, init.operands[iv_index], None)
+                if src is not None and src.constant_value() is not None:
+                    start = src.constant_value()
+        trips = bound - start
+        if direction in ("LE", "GE"):
+            trips += 1
+        return float(max(1, abs(trips)))
+
+    # ------------------------------------------------------------------
+    def _computation_flops(self, name: str) -> float:
+        """Total FLOPs *inside* a computation (fusion bodies): dots/convs
+        exact, elementwise 1/elem; no bytes (internal traffic is VMEM)."""
+        if ("flops", name) in self._cost_memo:
+            return self._cost_memo[("flops", name)]
+        comp = self.computations.get(name)
+        total = 0.0
+        if comp is not None:
+            for ins in comp.instructions:
+                if ins.opcode == "dot":
+                    total += self._dot_flops(comp, ins)
+                elif ins.opcode == "convolution":
+                    total += self._conv_flops(comp, ins)
+                elif ins.opcode in ("fusion", "call", "map", "reduce", "reduce-window"):
+                    callee = self._called(ins, "calls") or self._called(ins, "to_apply")
+                    if callee:
+                        mult = ins.out_numel if ins.opcode in ("map",) else 1
+                        total += self._computation_flops(callee) * max(1, mult)
+                    if ins.opcode in ("reduce", "reduce-window"):
+                        total += ins.out_numel
+                elif ins.opcode == "while":
+                    body = self._called(ins, "body")
+                    trips = self._infer_trip_count(ins, comp) or 1.0
+                    total += trips * self._computation_flops(body)
+                elif ins.opcode not in _FREE_OPS:
+                    total += ins.out_numel
+        self._cost_memo[("flops", name)] = total
+        return total
+
+    def _slice_read_bytes(self, callee_name: str):
+        """For a fusion body: map param index -> billed read bytes when
+        that parameter is consumed ONLY by dynamic-slice/gather ops (XLA
+        reads the slice, not the buffer — billing the full operand makes
+        a scan that slices its stacked carry look 80x more expensive).
+        Returns {param_idx: sliced_bytes}."""
+        if ("slices", callee_name) in self._cost_memo:
+            return self._cost_memo[("slices", callee_name)]
+        comp = self.computations.get(callee_name)
+        out: dict = {}
+        if comp is not None:
+            pname_to_idx = {}
+            for ins in comp.instructions:
+                if ins.opcode == "parameter":
+                    try:
+                        pname_to_idx[ins.name] = int(ins.raw_operands.strip())
+                    except ValueError:
+                        pass
+            sliced: dict = {}
+            full: set = set()
+            for ins in comp.instructions:
+                if ins.opcode == "parameter":
+                    continue
+                for op in ins.operands:
+                    if op not in pname_to_idx:
+                        continue
+                    idx = pname_to_idx[op]
+                    if ins.opcode in ("dynamic-slice", "gather"):
+                        sliced[idx] = sliced.get(idx, 0) + ins.out_bytes
+                    else:
+                        full.add(idx)
+            out = {i: b for i, b in sliced.items() if i not in full}
+        self._cost_memo[("slices", callee_name)] = out
+        return out
+
+    def _has_dus(self, callee_name: str) -> bool:
+        key = ("dus", callee_name)
+        if key not in self._cost_memo:
+            comp = self.computations.get(callee_name)
+            self._cost_memo[key] = bool(comp) and any(
+                i.opcode == "dynamic-update-slice" for i in comp.instructions)
+        return self._cost_memo[key]
+
+    def cost(self, comp_name: str = None, _depth: int = 0) -> HloCost:
+        """Walk a computation at fusion-boundary granularity."""
+        name = comp_name or self.entry
+        comp = self.computations[name]
+        cost = HloCost()
+        for ins in comp.instructions:
+            if ins.opcode in _FREE_OPS or ins.opcode.endswith("-done"):
+                continue
+            if ins.opcode.startswith(COLLECTIVE_OPS):
+                kind = next(k for k in COLLECTIVE_OPS if ins.opcode.startswith(k))
+                groups = parse_replica_groups(ins.attrs)
+                if kind == "collective-permute" and not groups:
+                    # permutes carry source_target_pairs, not replica_groups;
+                    # all pairs shift concurrently -> one synchronized group
+                    pairs = re.findall(r"\{(\d+),(\d+)\}", ins.attrs)
+                    members = sorted({int(x) for p in pairs for x in p})
+                    if members:
+                        groups = [members]
+                in_bytes = sum(s.bytes for op in ins.operands
+                               for s in self._operand_shape(comp, op))
+                out_bytes = ins.out_bytes
+                payload = out_bytes if kind == "all-gather" else in_bytes
+                rec = CollectiveRecord(kind, ins.name, payload, in_bytes,
+                                       out_bytes, groups)
+                cost.collectives.append(rec)
+                cost.trace.append(TraceOp("collective", ins.name,
+                                          collective=rec))
+                continue
+            if ins.opcode == "while":
+                body = self._called(ins, "body")
+                trips = self._infer_trip_count(ins, comp)
+                if trips is None:
+                    trips = 1.0
+                    cost.unknown_trip_counts += 1
+                sub = self.cost(body, _depth + 1)
+                cost.flops += trips * sub.flops
+                cost.hbm_bytes += trips * sub.hbm_bytes
+                cost.unknown_trip_counts += sub.unknown_trip_counts
+                for c in sub.collectives:
+                    c2 = dataclasses.replace(c, count=c.count * trips)
+                    cost.collectives.append(c2)
+                for top in sub.trace:
+                    cost.trace.append(dataclasses.replace(
+                        top, repeat=top.repeat * trips,
+                        collective=dataclasses.replace(
+                            top.collective, count=top.collective.count * trips)
+                        if top.collective else None))
+                continue
+            if ins.opcode == "conditional":
+                branches = re.findall(r"branch_computations=\{([^}]*)\}", ins.attrs)
+                names = _OPERAND_RE.findall(branches[0]) if branches else []
+                if not names:
+                    tc = self._called(ins, "true_computation")
+                    fc = self._called(ins, "false_computation")
+                    names = [n for n in (tc, fc) if n]
+                if names:  # worst-case branch
+                    subs = [self.cost(n, _depth + 1) for n in names]
+                    worst = max(subs, key=lambda s: s.flops + s.hbm_bytes)
+                    cost.flops += worst.flops
+                    cost.hbm_bytes += worst.hbm_bytes
+                    cost.collectives.extend(worst.collectives)
+                    cost.trace.extend(worst.trace)
+                continue
+            if ins.opcode == "call":
+                callee = self._called(ins, "to_apply")
+                if callee:
+                    sub = self.cost(callee, _depth + 1)
+                    cost.flops += sub.flops
+                    cost.hbm_bytes += sub.hbm_bytes
+                    cost.collectives.extend(sub.collectives)
+                    cost.trace.extend(sub.trace)
+                continue
+            # ---- ordinary top-level (fusion-boundary) instruction ----
+            flops = 0.0
+            if ins.opcode == "dot":
+                flops = self._dot_flops(comp, ins)
+            elif ins.opcode == "convolution":
+                flops = self._conv_flops(comp, ins)
+            elif ins.opcode == "fusion":
+                callee = self._called(ins, "calls")
+                if callee:
+                    flops = self._computation_flops(callee)
+            elif ins.opcode in ("reduce", "reduce-window", "sort", "scatter",
+                                "gather", "select-and-scatter"):
+                flops = ins.out_numel
+            else:
+                flops = ins.out_numel  # elementwise-ish
+            per_op = [sum(s.bytes for s in self._operand_shape(comp, op))
+                      for op in ins.operands]
+            inplace_capable = ins.opcode == "dynamic-update-slice"
+            if ins.opcode == "fusion":
+                callee = self._called(ins, "calls")
+                if callee:
+                    for idx, b in self._slice_read_bytes(callee).items():
+                        if idx < len(per_op):
+                            per_op[idx] = min(per_op[idx], b)
+                    inplace_capable = self._has_dus(callee)
+            elif ins.opcode in ("dynamic-slice", "gather") and per_op:
+                per_op[0] = min(per_op[0], 2 * ins.out_bytes)
+            in_bytes = sum(per_op)
+            hbm = in_bytes + ins.out_bytes
+            # In-place update aliasing (dynamic-update-slice and fusions
+            # CONTAINING one): XLA updates the buffer in place, so true
+            # traffic is ~2x the small update, not read+write of the full
+            # operand.  Signature: the op can update in place AND one
+            # operand == output shape and >> the rest (scan-carry stacks,
+            # KV-cache writes).  Without this, a depth-L scan bills L^2
+            # slice copies and decode bills a full cache copy per layer.
+            if per_op and inplace_capable:
+                biggest = max(per_op)
+                rest = in_bytes - biggest
+                if (biggest == ins.out_bytes and biggest > (1 << 20)
+                        and biggest >= 8 * max(rest, 1)):
+                    hbm = 2 * rest + min(biggest, 2 * max(rest, 1))
+            cost.flops += flops
+            cost.hbm_bytes += hbm
+            cost.trace.append(TraceOp("compute", ins.name, flops=flops,
+                                      hbm_bytes=hbm))
+        return cost
+
+
+def analyze(hlo_text: str) -> HloCost:
+    return HloModule(hlo_text).cost()

@@ -1,0 +1,145 @@
+"""Hook system (paper Sec. 4.1, part 4).
+
+Hooks are small pieces of software attached to the engine, components or
+connections.  They read (or, for fault injection, perturb) simulation
+state without being part of the critical protocol path.  Used here for:
+trace collection, performance metrics, stall accounting and fault /
+straggler injection -- the same four uses the paper lists.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import typing
+
+from .hw import ps_to_s
+
+# Hook positions
+EVENT_START = "event_start"
+EVENT_END = "event_end"
+REQ_SEND = "request_send"
+REQ_DELIVER = "request_deliver"
+BUSY_INTERVAL = "busy_interval"   # payload: (component, start_ps, end_ps, tag)
+
+
+@dataclasses.dataclass(frozen=True)
+class HookCtx:
+    position: str
+    time: int
+    item: typing.Any          # Event or Request or tuple
+    owner: typing.Any = None  # component/connection the hook fired on
+
+
+class Hook:
+    """Base hook: override ``func``."""
+
+    def func(self, ctx: HookCtx) -> None:  # pragma: no cover - interface
+        raise NotImplementedError
+
+
+class Hookable:
+    """Mixin giving engine/components/connections a hook list."""
+
+    def __init__(self) -> None:
+        self._hooks: list = []
+
+    def accept_hook(self, hook: Hook) -> None:
+        self._hooks.append(hook)
+
+    def invoke_hooks(self, position: str, time: int, item: typing.Any) -> None:
+        for h in self._hooks:
+            h.func(HookCtx(position=position, time=time, item=item, owner=self))
+
+
+class Tracer(Hook):
+    """Records every hook firing (bounded) -- debugging / validation."""
+
+    def __init__(self, limit: int = 1_000_000) -> None:
+        self.records: list = []
+        self.limit = limit
+
+    def func(self, ctx: HookCtx) -> None:
+        if len(self.records) < self.limit:
+            self.records.append(ctx)
+
+
+class MetricsHook(Hook):
+    """Aggregates busy time per component and request bytes per connection."""
+
+    def __init__(self) -> None:
+        self.busy_ps = collections.Counter()        # name -> busy picoseconds
+        self.busy_by_tag = collections.Counter()    # (name, tag) -> ps
+        self.bytes_sent = collections.Counter()     # connection name -> bytes
+        self.requests = collections.Counter()       # connection name -> count
+        self.end_time_ps = 0
+
+    def func(self, ctx: HookCtx) -> None:
+        if ctx.position == BUSY_INTERVAL:
+            comp, start, end, tag = ctx.item
+            self.busy_ps[comp.name] += end - start
+            self.busy_by_tag[(comp.name, tag)] += end - start
+            self.end_time_ps = max(self.end_time_ps, end)
+        elif ctx.position == REQ_SEND:
+            req = ctx.item
+            self.bytes_sent[ctx.owner.name] += getattr(req, "size_bytes", 0)
+            self.requests[ctx.owner.name] += 1
+        if ctx.position in (EVENT_END, REQ_DELIVER):
+            self.end_time_ps = max(self.end_time_ps, ctx.time)
+
+    def utilization(self, name: str) -> float:
+        if self.end_time_ps == 0:
+            return 0.0
+        return self.busy_ps[name] / self.end_time_ps
+
+    def summary(self) -> dict:
+        return {
+            "end_time_s": ps_to_s(self.end_time_ps),
+            "busy_s": {k: ps_to_s(v) for k, v in self.busy_ps.items()},
+            "bytes_sent": dict(self.bytes_sent),
+        }
+
+
+class StallHook(Hook):
+    """Counts stall reasons announced by components (kind='stall')."""
+
+    def __init__(self) -> None:
+        self.stalls = collections.Counter()
+
+    def func(self, ctx: HookCtx) -> None:
+        if ctx.position == EVENT_START and getattr(ctx.item, "kind", "") == "stall":
+            self.stalls[ctx.item.payload] += 1
+
+
+class FaultInjector(Hook):
+    """Injects failures / stragglers into chips at given times.
+
+    ``plan`` maps component-name -> list of (time_ps, action, arg):
+      * ("fail", None)           -- chip stops handling events
+      * ("slow", factor)         -- compute durations multiplied by factor
+      * ("recover", None)        -- undo both
+    The injector flips flags that well-behaved components consult inside
+    their own ``handle`` -- state is still only mutated by the owner
+    (no-magic is preserved: the hook only sets an *input* flag the
+    component reads, the same way MGSim injects faults).
+    """
+
+    def __init__(self, plan: dict) -> None:
+        self.plan = {k: sorted(v) for k, v in plan.items()}
+
+    def func(self, ctx: HookCtx) -> None:
+        if ctx.position != EVENT_START:
+            return
+        comp = ctx.owner
+        name = getattr(comp, "name", None)
+        actions = self.plan.get(name)
+        if not actions:
+            return
+        while actions and actions[0][0] <= ctx.time:
+            _, action, arg = actions.pop(0)
+            if action == "fail":
+                comp.fault_failed = True
+            elif action == "slow":
+                comp.fault_slow_factor = float(arg)
+            elif action == "recover":
+                comp.fault_failed = False
+                comp.fault_slow_factor = 1.0

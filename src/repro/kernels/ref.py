@@ -1,0 +1,91 @@
+"""Pure-jnp oracles for every Pallas kernel (the DP-4 ground truth).
+
+Each function is the semantic definition its kernel must match;
+tests/test_kernels.py sweeps shapes and dtypes asserting allclose.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """q (B,Sq,H,hd); k/v (B,Skv,K,hd) GQA -> (B,Sq,H,hd)."""
+    B, Sq, H, hd = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bskgh,btkh->bkgst", qg, kf) / math.sqrt(hd)
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Skv), bool), k=Skv - Sq)
+        s = jnp.where(mask, s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def ssd_chunk_ref(x, dt, cs, Bm, Cm):
+    """Intra-chunk SSD. x (R,H,Q,P); dt/cs (R,H,Q); Bm/Cm (R,H,Q,N)
+    -> (y_diag (R,H,Q,P) f32, states (R,H,N,P) f32)."""
+    x = x.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    cs = cs.astype(jnp.float32)
+    Bm = Bm.astype(jnp.float32)
+    Cm = Cm.astype(jnp.float32)
+    Q = x.shape[2]
+    seg = cs[..., :, None] - cs[..., None, :]           # (R,H,Q,Q) i,j
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(mask, jnp.exp(seg), 0.0)
+    att = jnp.einsum("rhin,rhjn->rhij", Cm, Bm) * decay * dt[..., None, :]
+    y = jnp.einsum("rhij,rhjp->rhip", att, x)
+    w = jnp.exp(cs[..., -1:] - cs) * dt                 # (R,H,Q)
+    s = jnp.einsum("rhqn,rhq,rhqp->rhnp", Bm, w, x)
+    return y, s
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) *
+            w.astype(jnp.float32)).astype(x.dtype)
+
+
+def stencil2d_ref(img, kern):
+    """Same-padded KxK correlation-style stencil matching stencil2d."""
+    K = kern.shape[0]
+    r = K // 2
+    pad = jnp.pad(img.astype(jnp.float32), r)
+    out = jnp.zeros(img.shape, jnp.float32)
+    for dy in range(K):
+        for dx in range(K):
+            out = out + kern[dy, dx].astype(jnp.float32) * \
+                jax.lax.dynamic_slice(pad, (dy, dx), img.shape)
+    return out.astype(img.dtype)
+
+
+def bitonic_stage_ref(x, dist: int, size: int):
+    """One compare-exchange stage: partner = i ^ dist, ascending iff
+    (i & size) == 0."""
+    L = x.shape[0]
+    idx = jnp.arange(L)
+    partner = idx ^ dist
+    other = x[partner]
+    asc = (idx & size) == 0
+    take_min = (idx < partner) == asc
+    return jnp.where(take_min, jnp.minimum(x, other), jnp.maximum(x, other))
+
+
+def bitonic_sort_ref(x):
+    """Full bitonic sort (power-of-two length) from stage_ref."""
+    L = x.shape[0]
+    size = 2
+    while size <= L:
+        dist = size // 2
+        while dist >= 1:
+            x = bitonic_stage_ref(x, dist, size)
+            dist //= 2
+        size *= 2
+    return x

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module constants) so importing this module
+never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import, and smoke tests must keep seeing 1 device.
+
+Single pod: (16, 16) = 256 chips, axes ("data", "model").
+Multi-pod:  (2, 16, 16) = 512 chips, axes ("pod", "data", "model") — the
+"pod" axis is pure DP over DCN; "data"/"model" stay intra-pod on ICI.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    return jax.sharding.Mesh(
+        __import__("numpy").asarray(devices).reshape(shape), axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh over the first prod(shape) devices (tests/examples)."""
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    return jax.sharding.Mesh(
+        __import__("numpy").asarray(devices).reshape(shape), axes)

@@ -1,0 +1,5 @@
+from .base import ModelConfig, get_config, list_archs, register
+from . import api, layers, moe, ssm
+
+__all__ = ["ModelConfig", "get_config", "list_archs", "register",
+           "api", "layers", "moe", "ssm"]

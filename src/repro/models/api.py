@@ -1,0 +1,76 @@
+"""Unified model facade: family dispatch for init / loss / serve.
+
+Every architecture exposes the same five entry points regardless of
+family, which is what launch/dryrun.py, train/loop.py and serve/engine.py
+program against:
+
+    init(rng, cfg)                      -> params
+    loss(params, cfg, batch)            -> scalar f32
+    init_cache(cfg, batch, max_seq)     -> cache pytree
+    prefill(params, cfg, cache, batch)  -> (last_logits, cache)
+    decode_step(params, cfg, cache, tok)-> (logits, cache)
+
+``batch`` carries modality extras under fixed keys: "frames" (audio stub),
+"patches" (VLM stub).
+"""
+from __future__ import annotations
+
+import typing
+
+import jax
+
+from . import encdec, hybrid, mamba_lm, transformer, vlm
+from .base import ModelConfig
+
+_FAMILY = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": vlm,
+    "encdec": encdec,
+    "ssm": mamba_lm,
+    "hybrid": hybrid,
+}
+
+
+def module_for(cfg: ModelConfig):
+    return _FAMILY[cfg.family]
+
+
+def init(rng, cfg: ModelConfig):
+    return module_for(cfg).init(rng, cfg)
+
+
+def loss(params, cfg: ModelConfig, batch, ctx=None) -> jax.Array:
+    return module_for(cfg).loss_fn(params, cfg, batch, ctx=ctx)
+
+
+def forward(params, cfg: ModelConfig, batch):
+    m = module_for(cfg)
+    if cfg.family == "encdec":
+        return m.forward(params, cfg, batch["tokens"], batch["frames"])
+    if cfg.family == "vlm":
+        return m.forward(params, cfg, batch["tokens"], batch["patches"])
+    return m.forward(params, cfg, batch["tokens"])
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    return module_for(cfg).init_cache(cfg, batch, max_seq, dtype)
+
+
+def prefill(params, cfg: ModelConfig, cache, batch):
+    m = module_for(cfg)
+    if cfg.family == "encdec":
+        return m.prefill(params, cfg, batch["tokens"], cache,
+                         frames=batch["frames"])
+    if cfg.family == "vlm":
+        return m.prefill(params, cfg, batch["tokens"], cache,
+                         patches=batch["patches"])
+    return m.prefill(params, cfg, batch["tokens"], cache)
+
+
+def decode_step(params, cfg: ModelConfig, cache, token):
+    return module_for(cfg).decode_step(params, cfg, cache, token)
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))

@@ -1,0 +1,215 @@
+"""Model configuration + registry.
+
+One :class:`ModelConfig` describes every assigned architecture; family
+dispatch ("dense" | "moe" | "ssm" | "hybrid" | "encdec" | "vlm") selects
+the forward implementation.  Configs are plain frozen dataclasses so they
+hash/compare cleanly for jit static args.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import typing
+
+import jax.numpy as jnp
+
+FAMILIES = ("dense", "moe", "ssm", "hybrid", "encdec", "vlm")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str
+    num_layers: int
+    d_model: int
+    num_heads: int = 0             # 0 for attention-free
+    num_kv_heads: int = 0
+    d_ff: int = 0
+    vocab_size: int = 0
+    head_dim: int = 0              # 0 -> d_model // num_heads
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    # --- MoE ---
+    num_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+    moe_groups: int = 0            # >1: per-group dispatch (GShard-style
+    #                                local capacity; no global cumsum)
+    # --- SSM (Mamba2 / SSD) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 256
+    # --- hybrid (zamba2): shared attention block every k SSM layers ---
+    attn_every: int = 0
+    # --- encoder-decoder (whisper) ---
+    encoder_layers: int = 0
+    encoder_seq: int = 0           # stub frontend: frames arrive pre-embedded
+    # --- VLM (llava) ---
+    num_patches: int = 0           # stub frontend: patches arrive pre-embedded
+    # --- numerics / lowering ---
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"        # activation/param dtype
+    remat: bool = True
+    scan_layers: bool = True
+    use_pallas: bool = False       # CPU dry-run lowers the pure-JAX path
+    # --- optimisation knobs (perf hillclimbing; defaults = paper-faithful) ---
+    attn_impl: str = "ref"         # "ref" | "blocked" | "flash" (Pallas)
+    seq_shard_activations: bool = False  # SP: residual stream seq-sharded
+    fsdp: bool = False             # shard params/opt over the data axis too
+    microbatches: int = 1          # grad accumulation (activation peak / k)
+
+    # ------------------------------------------------------------------
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to a multiple of 128 so the embedding/logits
+        shard evenly on any mesh up to model=128 (standard TP practice;
+        padded logit columns are masked to -inf in unembed — exact)."""
+        if not self.vocab_size:
+            return 0
+        return ((self.vocab_size + 127) // 128) * 128
+
+    @property
+    def hd(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(1, self.num_heads)
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.hd
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.hd
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def ssm_groups(self) -> int:
+        return 1
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.ssm_groups * self.ssm_state
+
+    @property
+    def in_proj_dim(self) -> int:
+        # z, x, B, C, dt
+        return (2 * self.d_inner + 2 * self.ssm_groups * self.ssm_state
+                + self.ssm_heads)
+
+    @property
+    def jnp_dtype(self):
+        return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+                "float16": jnp.float16}[self.dtype]
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic decode: SSM state is O(1); hybrid shards its few
+        attention caches. Pure full-attention archs skip long_500k."""
+        return self.family in ("ssm", "hybrid")
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ------------------------------------------------------------------
+    def param_count(self) -> int:
+        """Analytic parameter count (cross-checked against real init in
+        tests/test_models.py::test_param_count_matches)."""
+        d, V = self.d_model, self.padded_vocab
+        n = 0
+        if self.family == "encdec":
+            n += V * d + d * V                      # embed + lm head
+            n += self.encoder_layers * self._attn_params(cross=False)
+            n += self.encoder_layers * self._mlp_params()
+            n += self.encoder_layers * 2 * d        # norms
+            n += self.num_layers * (self._attn_params() * 2 +  # self+cross
+                                    self._mlp_params() + 3 * d)
+            n += 2 * d                              # final norms enc+dec
+            return n
+        if V:
+            n += V * d                              # embed
+            if not self.tie_embeddings:
+                n += d * V                          # lm_head
+        n += d                                      # final norm
+        L = self.num_layers
+        if self.family in ("dense", "vlm"):
+            n += L * (self._attn_params() + self._mlp_params() + 2 * d)
+        elif self.family == "moe":
+            n += L * (self._attn_params() + self._moe_params() + 2 * d)
+        elif self.family == "ssm":
+            n += L * (self._ssm_params() + d)
+        elif self.family == "hybrid":
+            n += L * (self._ssm_params() + d)
+            n += self._attn_params() + self._mlp_params() + 2 * d  # shared blk
+        return n
+
+    def _attn_params(self, cross: bool = False) -> int:
+        d = self.d_model
+        n = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        if self.qkv_bias:
+            n += self.q_dim + 2 * self.kv_dim
+        return n
+
+    def _mlp_params(self) -> int:
+        if self.family == "encdec":                 # gelu 2-matrix MLP
+            return 2 * self.d_model * self.d_ff
+        return 3 * self.d_model * self.d_ff         # SwiGLU
+
+    def _moe_params(self) -> int:
+        return (self.d_model * self.num_experts
+                + self.num_experts * 3 * self.d_model * self.d_ff)
+
+    def _ssm_params(self) -> int:
+        d = self.d_model
+        n = d * self.in_proj_dim                    # in_proj
+        n += self.conv_dim * (self.ssm_conv_width + 1)  # conv w + bias
+        n += 3 * self.ssm_heads                     # A_log, D, dt_bias
+        n += self.d_inner                           # gated norm
+        n += self.d_inner * d                       # out_proj
+        return n
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top-k experts only)."""
+        if self.family != "moe":
+            return self.param_count()
+        inactive = (self.num_experts - self.experts_per_token) * \
+            3 * self.d_model * self.d_ff * self.num_layers
+        return self.param_count() - inactive
+
+
+# --------------------------------------------------------------------------
+_REGISTRY: typing.Dict[str, typing.Callable[[], ModelConfig]] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _REGISTRY:
+        from repro import configs  # noqa: F401  (populates the registry)
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def list_archs() -> typing.List[str]:
+    from repro import configs  # noqa: F401
+    return sorted(_REGISTRY)

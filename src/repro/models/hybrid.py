@@ -1,0 +1,226 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one SHARED attention block.
+
+81 SSM layers; after every ``attn_every``-th SSM layer the single shared
+attention+MLP block (one parameter set, reused) runs — Zamba2's
+parameter-efficient global-mixing trick.  Layout for scan-friendliness:
+
+    G = num_layers // attn_every   super-blocks of (attn_every SSM + attn)
+    R = num_layers % attn_every    tail SSM layers
+
+SSM params are stacked (G, attn_every, ...) + tail (R, ...); the shared
+block's KV cache is stacked per application: (G, B, T, K, hd).
+
+Long-context decode (long_500k) is the point of this family: per-token
+state is O(1) in sequence for the SSM stack and the few shared-attention
+caches are sequence-sharded over the "model" mesh axis.
+"""
+from __future__ import annotations
+
+import typing
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import ssm as S
+from .base import ModelConfig
+
+Params = typing.Dict[str, typing.Any]
+
+
+def _gr(cfg: ModelConfig):
+    g = cfg.num_layers // cfg.attn_every
+    r = cfg.num_layers - g * cfg.attn_every
+    return g, r
+
+
+def init(rng, cfg: ModelConfig) -> Params:
+    rs = L.split_rngs(rng, 5)
+    dt = cfg.jnp_dtype
+    G, R = _gr(cfg)
+    K = cfg.attn_every
+
+    def stack_gk(rng_):
+        outs = [S.init_mamba2(r, cfg) for r in L.split_rngs(rng_, G * K)]
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        return jax.tree.map(lambda x: x.reshape((G, K) + x.shape[1:]), stacked)
+
+    p: Params = L.init_embed(rs[0], cfg)
+    p["blocks"] = {"ssm": stack_gk(rs[1]),
+                   "ln": jnp.ones((G, K, cfg.d_model), dt)}
+    if R:
+        outs = [S.init_mamba2(r, cfg) for r in L.split_rngs(rs[2], R)]
+        p["tail"] = {"ssm": jax.tree.map(lambda *xs: jnp.stack(xs), *outs),
+                     "ln": jnp.ones((R, cfg.d_model), dt)}
+    p["shared"] = {
+        "attn": L.init_attention(rs[3], cfg),
+        "mlp": L.init_swiglu(rs[4], cfg),
+        "ln1": jnp.ones((cfg.d_model,), dt),
+        "ln2": jnp.ones((cfg.d_model,), dt),
+    }
+    p["ln_f"] = jnp.ones((cfg.d_model,), dt)
+    return p
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+def _ssm_sub(lp, h, cfg, ctx=None):
+    return h + S.mamba2_block(lp["ssm"], L.rms_norm(h, lp["ln"], cfg.norm_eps),
+                              cfg, ctx=ctx)
+
+
+def _shared_block(sp, h, cfg, positions, kv_cache=None, cache_pos=None):
+    a, kv = L.attention_block(sp["attn"],
+                              L.rms_norm(h, sp["ln1"], cfg.norm_eps), cfg,
+                              positions=positions, causal=kv_cache is None,
+                              kv_cache=kv_cache, cache_pos=cache_pos)
+    h = h + a
+    h = h + L.swiglu(sp["mlp"], L.rms_norm(h, sp["ln2"], cfg.norm_eps))
+    return h, kv
+
+
+def forward(p: Params, cfg: ModelConfig, tokens, extra_embeds=None,
+            ctx=None):
+    h = L.embed(p, tokens)
+    Sq = h.shape[1]
+    positions = jnp.arange(Sq)
+    G, R = _gr(cfg)
+
+    def super_block(h, bp):
+        def inner(h, lp):
+            return _ssm_sub(lp, h, cfg, ctx), None
+        if cfg.remat:
+            # nested remat: one SSM layer's internals live at a time
+            # during the super-block backward (zamba2 §Perf iteration 2)
+            inner = jax.checkpoint(inner)
+        h, _ = jax.lax.scan(inner, h, bp)
+        h, _ = _shared_block(p["shared"], h, cfg, positions)
+        return h, None
+
+    body = jax.checkpoint(super_block) if cfg.remat else super_block
+    h, _ = jax.lax.scan(body, h, p["blocks"])
+    if R:
+        def tail_body(h, lp):
+            return _ssm_sub(lp, h, cfg, ctx), None
+        tb = jax.checkpoint(tail_body) if cfg.remat else tail_body
+        h, _ = jax.lax.scan(tb, h, p["tail"])
+    h = L.rms_norm(h, p["ln_f"], cfg.norm_eps)
+    return L.unembed(p, h, cfg), 0.0
+
+
+def loss_fn(p: Params, cfg: ModelConfig, batch, aux_weight: float = 0.0,
+            ctx=None):
+    logits, _ = forward(p, cfg, batch["tokens"], ctx=ctx)
+    return L.cross_entropy(logits, batch["targets"], batch.get("mask"))
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None) -> dict:
+    dt = dtype or cfg.jnp_dtype
+    G, R = _gr(cfg)
+    K = cfg.attn_every
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    cache = {
+        "k": jnp.zeros((G, batch, max_seq, cfg.num_kv_heads, cfg.hd), dt),
+        "v": jnp.zeros((G, batch, max_seq, cfg.num_kv_heads, cfg.hd), dt),
+        "ssm": jnp.zeros((G, K, batch, H, N, P), jnp.float32),
+        "conv": jnp.zeros((G, K, batch, cfg.ssm_conv_width - 1, cfg.conv_dim),
+                          jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if R:
+        cache["ssm_tail"] = jnp.zeros((R, batch, H, N, P), jnp.float32)
+        cache["conv_tail"] = jnp.zeros(
+            (R, batch, cfg.ssm_conv_width - 1, cfg.conv_dim), jnp.float32)
+    return cache
+
+
+def prefill(p: Params, cfg: ModelConfig, tokens, cache: dict):
+    B, Sq = tokens.shape
+    h = L.embed(p, tokens)
+    positions = jnp.arange(Sq)
+    G, R = _gr(cfg)
+
+    def super_block(h, bp):
+        def inner(h, lp):
+            y, st = S.mamba2_block(
+                lp["ssm"], L.rms_norm(h, lp["ln"], cfg.norm_eps), cfg,
+                return_state=True)
+            return h + y, st
+        h, states = jax.lax.scan(inner, h, bp)
+        h, kv = _shared_block(p["shared"], h, cfg, positions)
+        return h, (states, kv)
+
+    h, (blk_states, kvs) = jax.lax.scan(super_block, h, p["blocks"])
+    cache = dict(cache)
+    cache["ssm"] = blk_states["ssm"]
+    cache["conv"] = blk_states["conv"]
+    k_new, v_new = kvs
+    cache["k"] = jax.lax.dynamic_update_slice(
+        cache["k"], k_new.astype(cache["k"].dtype), (0, 0, 0, 0, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(
+        cache["v"], v_new.astype(cache["v"].dtype), (0, 0, 0, 0, 0))
+    if R:
+        def tail_body(h, lp):
+            y, st = S.mamba2_block(
+                lp["ssm"], L.rms_norm(h, lp["ln"], cfg.norm_eps), cfg,
+                return_state=True)
+            return h + y, st
+        h, tail_states = jax.lax.scan(tail_body, h, p["tail"])
+        cache["ssm_tail"] = tail_states["ssm"]
+        cache["conv_tail"] = tail_states["conv"]
+    cache["pos"] = jnp.asarray(Sq, jnp.int32)
+    h = L.rms_norm(h[:, -1:], p["ln_f"], cfg.norm_eps)
+    return L.unembed(p, h, cfg)[:, 0], cache
+
+
+def decode_step(p: Params, cfg: ModelConfig, cache: dict, token):
+    B = token.shape[0]
+    h = L.embed(p, token[:, None])[:, 0]               # (B,d)
+    pos = cache["pos"]                                 # scalar or (B,) slots
+    positions = pos[:, None] if pos.ndim else \
+        pos[None, None] + jnp.zeros((1, 1), jnp.int32)
+    G, R = _gr(cfg)
+
+    def super_block(h, xs):
+        bp, ssm_st, conv_st, kc, vc = xs
+        # explicit (static) loop over the K inner SSM layers keeps state
+        # plumbing simple; K is small (6) so HLO stays compact.
+        new_ssm, new_conv = [], []
+        for i in range(cfg.attn_every):
+            lp = jax.tree.map(lambda x: x[i], bp)
+            st = {"ssm": ssm_st[i], "conv": conv_st[i]}
+            y, st2 = S.mamba2_step(
+                lp["ssm"], L.rms_norm(h, lp["ln"], cfg.norm_eps), st, cfg)
+            h = h + y
+            new_ssm.append(st2["ssm"])
+            new_conv.append(st2["conv"])
+        h2, (kc2, vc2) = _shared_block(p["shared"], h[:, None], cfg,
+                                       positions, kv_cache=(kc, vc),
+                                       cache_pos=pos)
+        return h2[:, 0], (jnp.stack(new_ssm), jnp.stack(new_conv), kc2, vc2)
+
+    h, (ssm_new, conv_new, k_new, v_new) = jax.lax.scan(
+        super_block, h, (p["blocks"], cache["ssm"], cache["conv"],
+                         cache["k"], cache["v"]))
+    cache = dict(cache, ssm=ssm_new, conv=conv_new, k=k_new, v=v_new)
+    if R:
+        new_s, new_c = [], []
+        for i in range(R):
+            lp = jax.tree.map(lambda x: x[i], p["tail"])
+            st = {"ssm": cache["ssm_tail"][i], "conv": cache["conv_tail"][i]}
+            y, st2 = S.mamba2_step(
+                lp["ssm"], L.rms_norm(h, lp["ln"], cfg.norm_eps), st, cfg)
+            h = h + y
+            new_s.append(st2["ssm"])
+            new_c.append(st2["conv"])
+        cache["ssm_tail"] = jnp.stack(new_s)
+        cache["conv_tail"] = jnp.stack(new_c)
+    cache["pos"] = pos + 1
+    h = L.rms_norm(h, p["ln_f"], cfg.norm_eps)
+    return L.unembed(p, h[:, None], cfg)[:, 0], cache

@@ -1,0 +1,93 @@
+"""Mamba2 language model (attention-free, SSD blocks only).
+
+mamba2-1.3b: 48 layers, d_model=2048, d_state=128 — sub-quadratic in
+sequence length, so it runs the long_500k cell (O(1) per-token state).
+"""
+from __future__ import annotations
+
+import typing
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import ssm as S
+from .base import ModelConfig
+
+Params = typing.Dict[str, typing.Any]
+
+
+def init(rng, cfg: ModelConfig) -> Params:
+    rs = L.split_rngs(rng, 2)
+    n = cfg.num_layers
+    p: Params = L.init_embed(rs[0], cfg)
+    outs = [S.init_mamba2(r, cfg) for r in L.split_rngs(rs[1], n)]
+    p["layers"] = {"ssm": jax.tree.map(lambda *xs: jnp.stack(xs), *outs),
+                   "ln": jnp.ones((n, cfg.d_model), cfg.jnp_dtype)}
+    p["ln_f"] = jnp.ones((cfg.d_model,), cfg.jnp_dtype)
+    return p
+
+
+def forward(p: Params, cfg: ModelConfig, tokens, extra_embeds=None,
+            ctx=None):
+    h = L.embed(p, tokens)
+
+    def body(h, lp):
+        y = S.mamba2_block(lp["ssm"],
+                           L.rms_norm(h, lp["ln"], cfg.norm_eps), cfg,
+                           ctx=ctx)
+        return h + y, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, p["layers"])
+    h = L.rms_norm(h, p["ln_f"], cfg.norm_eps)
+    return L.unembed(p, h, cfg), 0.0
+
+
+def loss_fn(p: Params, cfg: ModelConfig, batch, aux_weight: float = 0.0,
+            ctx=None):
+    logits, _ = forward(p, cfg, batch["tokens"], ctx=ctx)
+    return L.cross_entropy(logits, batch["targets"], batch.get("mask"))
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None) -> dict:
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    n = cfg.num_layers
+    return {"ssm": jnp.zeros((n, batch, H, N, P), jnp.float32),
+            "conv": jnp.zeros((n, batch, cfg.ssm_conv_width - 1, cfg.conv_dim),
+                              jnp.float32),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill(p: Params, cfg: ModelConfig, tokens, cache: dict):
+    h = L.embed(p, tokens)
+
+    def body(h, lp):
+        y, st = S.mamba2_block(lp["ssm"],
+                               L.rms_norm(h, lp["ln"], cfg.norm_eps), cfg,
+                               return_state=True)
+        return h + y, st
+
+    h, states = jax.lax.scan(body, h, p["layers"])
+    cache = dict(cache, ssm=states["ssm"], conv=states["conv"],
+                 pos=jnp.asarray(tokens.shape[1], jnp.int32))
+    h = L.rms_norm(h[:, -1:], p["ln_f"], cfg.norm_eps)
+    return L.unembed(p, h, cfg)[:, 0], cache
+
+
+def decode_step(p: Params, cfg: ModelConfig, cache: dict, token):
+    h = L.embed(p, token[:, None])[:, 0]
+
+    def body(h, xs):
+        lp, s_st, c_st = xs
+        y, st = S.mamba2_step(lp["ssm"],
+                              L.rms_norm(h, lp["ln"], cfg.norm_eps),
+                              {"ssm": s_st, "conv": c_st}, cfg)
+        return h + y, (st["ssm"], st["conv"])
+
+    h, (ssm_new, conv_new) = jax.lax.scan(
+        body, h, (p["layers"], cache["ssm"], cache["conv"]))
+    cache = dict(cache, ssm=ssm_new, conv=conv_new, pos=cache["pos"] + 1)
+    h = L.rms_norm(h[:, None], p["ln_f"], cfg.norm_eps)
+    return L.unembed(p, h, cfg)[:, 0], cache

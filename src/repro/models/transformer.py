@@ -1,0 +1,252 @@
+"""Decoder-only transformer LM (dense + MoE FFN variants).
+
+Covers qwen2-1.5b / qwen1.5-4b / qwen1.5-110b / internlm2-20b (dense),
+dbrx-132b / qwen3-moe-30b-a3b (moe), and the llava backbone (dense with
+prepended patch embeddings).
+
+Layer params are stacked on a leading axis and the forward `lax.scan`s
+over them (small HLO, O(1) compile in depth); ``cfg.remat`` wraps the
+scanned body in `jax.checkpoint` so only layer-boundary residuals are
+kept live — the policy that makes the 110b train_4k cell fit.
+"""
+from __future__ import annotations
+
+import typing
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import moe as M
+from .base import ModelConfig
+
+Params = typing.Dict[str, typing.Any]
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def init(rng, cfg: ModelConfig) -> Params:
+    r_embed, r_layers, r_ffn = jax.random.split(rng, 3)
+    dt = cfg.jnp_dtype
+    p: Params = L.init_embed(r_embed, cfg)
+    n = cfg.num_layers
+    p["layers"] = {
+        "attn": L._stack_init(L.init_attention, r_layers, n, cfg),
+        "ln1": jnp.ones((n, cfg.d_model), dt),
+        "ln2": jnp.ones((n, cfg.d_model), dt),
+    }
+    if cfg.family == "moe":
+        p["layers"]["moe"] = L._stack_init(M.init_moe, r_ffn, n, cfg)
+    else:
+        p["layers"]["mlp"] = L._stack_init(L.init_swiglu, r_ffn, n, cfg)
+    p["ln_f"] = jnp.ones((cfg.d_model,), dt)
+    return p
+
+
+# --------------------------------------------------------------------------
+# forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def _layer_fwd(lp: Params, h, cfg: ModelConfig, positions, ctx=None):
+    """One pre-norm block. Returns (h, aux).  ``ctx`` carries optional
+    sharding-constraint callables: {"sp": residual boundary, "ep": MoE
+    expert buffers} — injected by sharding/umode.py."""
+    ctx = ctx or {}
+    a, _ = L.attention_block(lp["attn"], L.rms_norm(h, lp["ln1"], cfg.norm_eps),
+                             cfg, positions=positions, causal=True)
+    h = h + a
+    hn = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+    if "moe" in lp:
+        B, S, d = hn.shape
+        if ctx.get("moe_sm") is not None:   # embedded D-mode EP (a2a)
+            y, aux = ctx["moe_sm"](lp["moe"], hn.reshape(B * S, d))
+        else:
+            y, aux = M.moe_ffn(lp["moe"], hn.reshape(B * S, d), cfg,
+                               ep_constraint=ctx.get("ep"))
+        y = y.reshape(B, S, d)
+    else:
+        y, aux = L.swiglu(lp["mlp"], hn), 0.0
+    h = h + y
+    if ctx.get("sp") is not None:
+        h = ctx["sp"](h)         # SP: keep residual seq-sharded at boundary
+    return h, aux
+
+
+def forward(p: Params, cfg: ModelConfig, tokens, extra_embeds=None,
+            ctx=None):
+    """tokens (B,S) int32 [, extra_embeds (B,P,d) prepended] -> logits f32."""
+    h = L.embed(p, tokens)
+    if extra_embeds is not None:
+        h = jnp.concatenate([extra_embeds.astype(h.dtype), h], axis=1)
+    S = h.shape[1]
+    positions = jnp.arange(S)
+    if ctx and ctx.get("sp") is not None:
+        h = ctx["sp"](h)
+
+    def body(h, lp):
+        return _layer_fwd(lp, h, cfg, positions, ctx)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        h, aux = jax.lax.scan(body, h, p["layers"])
+        aux = jnp.sum(aux)
+    else:
+        aux = 0.0
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda x: x[i], p["layers"])
+            h, a = body(h, lp)
+            aux = aux + a
+    h = L.rms_norm(h, p["ln_f"], cfg.norm_eps)
+    logits = L.unembed(p, h, cfg)
+    return logits, aux
+
+
+def _hidden(p: Params, cfg: ModelConfig, tokens, extra_embeds=None,
+            ctx=None):
+    """forward() up to (but excluding) the unembedding."""
+    h = L.embed(p, tokens)
+    if extra_embeds is not None:
+        h = jnp.concatenate([extra_embeds.astype(h.dtype), h], axis=1)
+    positions = jnp.arange(h.shape[1])
+    ctx = ctx or {}
+    if ctx.get("sp") is not None:
+        h = ctx["sp"](h)
+
+    def body(h, lp):
+        return _layer_fwd(lp, h, cfg, positions, ctx)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    h, aux = jax.lax.scan(body, h, p["layers"])
+    return L.rms_norm(h, p["ln_f"], cfg.norm_eps), jnp.sum(aux)
+
+
+def _chunked_xent(p: Params, cfg: ModelConfig, h, targets, mask=None,
+                  chunk: int = 512):
+    """Cross-entropy without ever materializing (B,S,V) logits: unembed +
+    logsumexp per sequence chunk with a checkpointed body — at 152k vocab
+    and 1M tokens the f32 logits (+cotangent) are ~5 GB/device, the
+    single largest loss-side buffer in the 110b cell (§Perf iteration)."""
+    B, S, d = h.shape
+    pad = (-S) % chunk
+    if mask is None:
+        mask = jnp.ones((B, S), h.dtype)
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    nc = (S + pad) // chunk
+    hs = jnp.moveaxis(h.reshape(B, nc, chunk, d), 1, 0)
+    ts = jnp.moveaxis(targets.reshape(B, nc, chunk), 1, 0)
+    ms = jnp.moveaxis(mask.reshape(B, nc, chunk), 1, 0)
+
+    @jax.checkpoint
+    def one(args):
+        hc, tc, mc = args
+        logits = L.unembed(p, hc, cfg)                  # (B,chunk,V) f32
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mc
+        return jnp.sum(nll), jnp.sum(mc)
+
+    nlls, counts = jax.lax.map(one, (hs, ts, ms))
+    return jnp.sum(nlls) / jnp.maximum(jnp.sum(counts), 1)
+
+
+def loss_fn(p: Params, cfg: ModelConfig, batch, aux_weight: float = 0.01,
+            ctx=None):
+    tgt = batch["targets"]
+    h, aux = _hidden(p, cfg, batch["tokens"],
+                     extra_embeds=batch.get("patches"), ctx=ctx)
+    if h.shape[1] != tgt.shape[1]:                # VLM: loss on text positions
+        h = h[:, -tgt.shape[1]:]
+    if cfg.padded_vocab * h.shape[1] >= (1 << 26):     # big V*S: chunked CE
+        nll = _chunked_xent(p, cfg, h, tgt, batch.get("mask"))
+    else:
+        logits = L.unembed(p, h, cfg)
+        nll = L.cross_entropy(logits, tgt, batch.get("mask"))
+    return nll + aux_weight * aux
+
+
+# --------------------------------------------------------------------------
+# serving: prefill + single-token decode with static KV cache
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=None) -> dict:
+    dt = dtype or cfg.jnp_dtype
+    shape = (cfg.num_layers, batch, max_seq, cfg.num_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill(p: Params, cfg: ModelConfig, tokens, cache: dict,
+            extra_embeds=None):
+    """Run the prompt, fill the cache, return logits of the last position."""
+    h = L.embed(p, tokens)
+    if extra_embeds is not None:
+        h = jnp.concatenate([extra_embeds.astype(h.dtype), h], axis=1)
+    S = h.shape[1]
+    positions = jnp.arange(S)
+
+    def body(h, lp):
+        a, kv = L.attention_block(
+            lp["attn"], L.rms_norm(h, lp["ln1"], cfg.norm_eps), cfg,
+            positions=positions, causal=True)
+        h = h + a
+        hn = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+        if "moe" in lp:
+            B, T, d = hn.shape
+            y, _ = M.moe_ffn(lp["moe"], hn.reshape(B * T, d), cfg)
+            y = y.reshape(B, T, d)
+        else:
+            y = L.swiglu(lp["mlp"], hn)
+        return h + y, kv
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    h, (ks, vs) = jax.lax.scan(body, h, p["layers"])
+    T = cache["k"].shape[2]
+    k_new = jax.lax.dynamic_update_slice(
+        cache["k"], ks.astype(cache["k"].dtype), (0, 0, 0, 0, 0))
+    v_new = jax.lax.dynamic_update_slice(
+        cache["v"], vs.astype(cache["v"].dtype), (0, 0, 0, 0, 0))
+    h = L.rms_norm(h[:, -1:], p["ln_f"], cfg.norm_eps)
+    logits = L.unembed(p, h, cfg)[:, 0]
+    return logits, {"k": k_new, "v": v_new,
+                    "pos": jnp.asarray(S, jnp.int32)}
+
+
+def decode_step(p: Params, cfg: ModelConfig, cache: dict, token):
+    """token (B,) int32 -> (logits (B,V) f32, new cache). One new token
+    attending to a KV cache of static length — the decode_* dry-run op."""
+    B = token.shape[0]
+    h = L.embed(p, token[:, None])                     # (B,1,d)
+    pos = cache["pos"]                                 # scalar or (B,) slots
+    positions = pos[:, None] if pos.ndim else \
+        pos[None, None] + jnp.zeros((1, 1), jnp.int32)
+
+    def body(h, xs):
+        lp, kc, vc = xs
+        a, (kc2, vc2) = L.attention_block(
+            lp["attn"], L.rms_norm(h, lp["ln1"], cfg.norm_eps), cfg,
+            positions=positions, causal=False, kv_cache=(kc, vc),
+            cache_pos=pos)
+        h = h + a
+        hn = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+        if "moe" in lp:
+            d = hn.shape[-1]
+            y, _ = M.moe_ffn(lp["moe"], hn.reshape(B, d), cfg)
+            y = y.reshape(B, 1, d)
+        else:
+            y = L.swiglu(lp["mlp"], hn)
+        return h + y, (kc2, vc2)
+
+    h, (k_new, v_new) = jax.lax.scan(body, h, (p["layers"], cache["k"],
+                                               cache["v"]))
+    h = L.rms_norm(h, p["ln_f"], cfg.norm_eps)
+    logits = L.unembed(p, h, cfg)[:, 0]
+    return logits, {"k": k_new, "v": v_new, "pos": pos + 1}

@@ -1,0 +1,31 @@
+"""LLaVA-NeXT-style VLM: anyres patch frontend (STUB) + dense LM backbone.
+
+Per the assignment, the modality frontend is a stub: ``input_specs()``
+provides precomputed patch embeddings (B, num_patches, d_model) — the
+anyres tiling (4 tiles + 1 base image, 576 patches each ≈ 2880) is
+represented by the patch count only.  The backbone (the systems-relevant
+part: 60L, d=7168) is the shared dense transformer; patches are prepended
+to the text tokens, loss applies to text positions.
+"""
+from __future__ import annotations
+
+from . import transformer as T
+from .base import ModelConfig
+
+init = T.init
+init_cache = T.init_cache
+
+
+def forward(p, cfg: ModelConfig, tokens, patches):
+    return T.forward(p, cfg, tokens, extra_embeds=patches)
+
+
+def loss_fn(p, cfg: ModelConfig, batch, aux_weight: float = 0.0, ctx=None):
+    return T.loss_fn(p, cfg, batch, ctx=ctx)
+
+
+def prefill(p, cfg: ModelConfig, tokens, cache, patches=None):
+    return T.prefill(p, cfg, tokens, cache, extra_embeds=patches)
+
+
+decode_step = T.decode_step

@@ -1,0 +1,19 @@
+"""MGMark-TPU: the paper's benchmark suite on the multi-pod TPU model.
+
+Seven workloads across the five collaborative-execution patterns
+(paper Sec. 5):
+
+  AES  partitioned   KM  partitioned   FIR  adjacent   SC  adjacent
+  GD   gather        MT  scatter       BS   irregular
+
+Each module: reference oracle + run in U-mode (jit/GSPMD — the paper's
+U-MGPU) and D-mode (shard_map, explicit collectives — D-MGPU).
+"""
+from . import aes, base, bs, fir, gd, km, mt, sc
+from .base import PatternReport, evaluate
+
+WORKLOADS = {"aes": aes, "km": km, "fir": fir, "sc": sc, "gd": gd,
+             "mt": mt, "bs": bs}
+
+__all__ = ["aes", "base", "bs", "fir", "gd", "km", "mt", "sc",
+           "WORKLOADS", "PatternReport", "evaluate"]

@@ -1,0 +1,147 @@
+"""Continuous-batching serving engine (Orca-style iteration batching).
+
+A fixed pool of B cache *slots*; requests are admitted into free slots as
+they arrive, every engine iteration runs ONE batched decode step across
+all active slots (per-slot positions — see layers.attention_block's
+vmap'd cache update), and finished slots are freed immediately for the
+next waiting request.  Prefill runs per-request (batch=1) and its cache
+rows are spliced into the slot pool.
+
+This is the serve-side analog of the paper's D-MGPU lesson: placement is
+explicit — each slot's KV rows live at a fixed batch index, sharded per
+sharding/specs.py, and admission never moves resident data.
+"""
+from __future__ import annotations
+
+import dataclasses
+import typing
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api
+from repro.models.base import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray              # (S,) int32
+    max_new_tokens: int = 16
+    # filled by the engine:
+    output: typing.List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+# cache leaf -> batch axis (transformer/encdec/ssm/hybrid layouts)
+_BATCH_AXIS = {"k": 1, "v": 1, "xk": 1, "xv": 1, "ssm": 1, "conv": 1,
+               "ssm_tail": 1, "conv_tail": 1}
+_HYBRID_AXIS = {"k": 1, "v": 1, "ssm": 2, "conv": 2,
+                "ssm_tail": 1, "conv_tail": 1}
+
+
+def _axis_for(cfg, key):
+    table = _HYBRID_AXIS if cfg.family == "hybrid" else _BATCH_AXIS
+    return table.get(key)
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, slots: int = 4,
+                 max_seq: int = 512, eos_token: int = -1) -> None:
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_seq = max_seq
+        self.eos = eos_token
+        cache = api.init_cache(cfg, slots, max_seq)
+        # engine-managed per-slot positions
+        cache["pos"] = jnp.zeros((slots,), jnp.int32)
+        self.cache = cache
+        self.active: typing.Dict[int, Request] = {}      # slot -> request
+        self.remaining: typing.Dict[int, int] = {}
+        self.last_token = jnp.zeros((slots,), jnp.int32)
+        self.queue: typing.List[Request] = []
+        self.steps = 0
+        self.prefills = 0
+        self._decode = jax.jit(
+            lambda p, c, t: api.decode_step(p, cfg, c, t))
+        self._prefill = jax.jit(
+            lambda p, c, b: api.prefill(p, cfg, c, b))
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _free_slots(self) -> typing.List[int]:
+        return [s for s in range(self.slots) if s not in self.active]
+
+    def _admit(self) -> None:
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            req = self.queue.pop(0)
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None]   # (1,S)
+            mini = api.init_cache(self.cfg, 1, self.max_seq)
+            logits, mini = self._prefill(self.params, mini,
+                                         {"tokens": prompt})
+            self.prefills += 1
+            self._splice(mini, slot, int(prompt.shape[1]))
+            tok = int(jnp.argmax(logits[0]))
+            req.output.append(tok)
+            self.last_token = self.last_token.at[slot].set(tok)
+            self.active[slot] = req
+            self.remaining[slot] = req.max_new_tokens - 1
+
+    def _splice(self, mini: dict, slot: int, prompt_len: int) -> None:
+        """Write the batch=1 prefill cache into slot `slot`."""
+        new = {}
+        for key, big in self.cache.items():
+            if key == "pos":
+                new["pos"] = big.at[slot].set(prompt_len)
+                continue
+            ax = _axis_for(self.cfg, key)
+            small = mini[key]
+            idx = [slice(None)] * big.ndim
+            idx[ax] = slice(slot, slot + 1)
+            new[key] = big.at[tuple(idx)].set(small.astype(big.dtype))
+        self.cache = new
+
+    def step(self) -> typing.List[Request]:
+        """One engine iteration: admit -> batched decode -> retire.
+        Returns requests completed this step."""
+        self._admit()
+        if not self.active:
+            return []
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          self.last_token)
+        self.steps += 1
+        done = []
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        # only active slots advance; idle slots re-decode garbage rows but
+        # their outputs are ignored and their pos is reset on admission
+        self.last_token = next_tok
+        for slot, req in list(self.active.items()):
+            tok = int(next_tok[slot])
+            req.output.append(tok)
+            self.remaining[slot] -= 1
+            hit_cap = int(self.cache["pos"][slot]) >= self.max_seq - 1
+            if tok == self.eos or self.remaining[slot] <= 0 or hit_cap:
+                req.done = True
+                done.append(req)
+                del self.active[slot]
+                del self.remaining[slot]
+        return done
+
+    def run_until_drained(self, max_steps: int = 10_000
+                          ) -> typing.List[Request]:
+        out = []
+        for _ in range(max_steps):
+            out.extend(self.step())
+            if not self.active and not self.queue:
+                break
+        return out
+
+    def stats(self) -> dict:
+        return {"decode_steps": self.steps, "prefills": self.prefills,
+                "active": len(self.active), "queued": len(self.queue)}

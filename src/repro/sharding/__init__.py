@@ -1,0 +1,5 @@
+from . import dmode, specs, umode
+from .specs import param_specs, state_specs, batch_specs, cache_specs_tree
+
+__all__ = ["dmode", "specs", "umode", "param_specs", "state_specs",
+           "batch_specs", "cache_specs_tree"]

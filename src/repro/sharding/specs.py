@@ -1,0 +1,173 @@
+"""Partition-spec rules: DP / TP (Megatron) / EP / SP / FSDP per family.
+
+Rules are keyed on parameter *names* (the leaf's dict key) and applied to
+the **trailing** dims, with leading stack dims (layers; zamba2's (G,K))
+padded with None — one rule table covers every family and both the
+stacked and unstacked (zamba2 shared block) layouts.
+
+Axes:
+  dp     = ("pod","data") on the multi-pod mesh, "data" on single-pod —
+           pure data parallel (batch dim).
+  model  = TP: attention heads / MLP ff / vocab / MoE experts / SSM heads.
+  fsdp   = "data" when cfg.fsdp — params + optimizer state additionally
+           sharded over the data axis (ZeRO-3-style; GSPMD inserts the
+           per-layer all-gathers inside the layer scan).
+
+Cache rules: KV heads go on "model" when divisible, otherwise the cache
+*sequence* dim is model-sharded (SP decode — mandatory for kv_heads < 16
+archs like qwen2-1.5b kv=2).
+"""
+from __future__ import annotations
+
+import typing
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.base import ModelConfig
+
+
+def dp_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names) or None
+
+
+def model_axis_size(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+# --------------------------------------------------------------------------
+# parameter rules
+# --------------------------------------------------------------------------
+
+def _param_rule(name: str, ndim: int, cfg: ModelConfig) -> P:
+    """Spec for the *trailing* dims of leaf `name` (pre-stack)."""
+    f = "data" if cfg.fsdp else None
+    table: typing.Dict[str, typing.Tuple] = {
+        # embeddings
+        "embed": ("model", f),
+        "lm_head": (f, "model"),
+        # attention (col-parallel qkv, row-parallel out)
+        "wq": (f, "model"), "wk": (f, "model"), "wv": (f, "model"),
+        "wo": ("model", f),
+        "bq": ("model",), "bk": ("model",), "bv": ("model",),
+        # dense MLPs
+        "wg": (f, "model"), "wu": (f, "model"), "wd": ("model", f),
+        "w1": (f, "model"), "w2": ("model", f),
+        # SSM (column-block layout: z/x/dt head-sharded, B/C replicated —
+        # B/C are shared across all heads so sharding them is pure waste)
+        "wz": (f, "model"), "wx": (f, "model"), "wdt": (f, "model"),
+        "wbc": (f, None), "out_proj": ("model", f),
+        "conv_xw": (None, "model"), "conv_xb": ("model",),
+        "conv_bcw": (None, None), "conv_bcb": (None,),
+        "A_log": ("model",), "D": ("model",), "dt_bias": ("model",),
+        "norm_w": ("model",),
+        # router stays replicated (tiny, read by every token)
+        "router": (None, None),
+    }
+    tail = table.get(name)
+    if tail is None:
+        return P()                                   # norms, scalars: replicate
+    if name in ("wg", "wu", "wd") and ndim >= 4:     # MoE expert stacks
+        # (..., E, d, ff): experts -> model (EP), d/ff -> fsdp
+        tail = ("model", f, None) if name != "wd" else ("model", None, f)
+    pad = ndim - len(tail)
+    return P(*(((None,) * pad) + tuple(tail)))
+
+
+def param_specs(cfg: ModelConfig, params_shape) -> typing.Any:
+    """Pytree of PartitionSpec mirroring the params tree (shape-only ok)."""
+    def leaf_spec(path, leaf):
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = str(entry.key)
+                break
+        return _param_rule(name, leaf.ndim, cfg)
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_shape)
+
+
+def state_specs(cfg: ModelConfig, state_shape) -> typing.Any:
+    """TrainState specs: mu/nu mirror params; step replicated."""
+    return {
+        "params": param_specs(cfg, state_shape["params"]),
+        "mu": param_specs(cfg, state_shape["mu"]),
+        "nu": param_specs(cfg, state_shape["nu"]),
+        "step": P(),
+    }
+
+
+# --------------------------------------------------------------------------
+# batch / activation / cache rules
+# --------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, batch, mesh: Mesh) -> typing.Any:
+    dp = dp_axes(mesh)
+
+    def spec(path, leaf):
+        b = leaf.shape[0] if leaf.shape else 0
+        lead = dp if (b and _divisible(b, mesh, dp)) else None
+        return P(*((lead,) + (None,) * (leaf.ndim - 1)))
+    return jax.tree_util.tree_map_with_path(spec, batch)
+
+
+def _divisible(b: int, mesh: Mesh, dp) -> bool:
+    if dp is None:
+        return False
+    n = 1
+    for a in (dp if isinstance(dp, tuple) else (dp,)):
+        n *= mesh.shape[a]
+    return b % n == 0
+
+
+def cache_specs_tree(cfg: ModelConfig, cache_shape, mesh: Mesh) -> typing.Any:
+    dp = dp_axes(mesh)
+    msize = model_axis_size(mesh)
+    kv_on_heads = cfg.num_kv_heads and cfg.num_kv_heads % msize == 0
+
+    def spec(path, leaf):
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = str(entry.key)
+                break
+        if name == "pos":
+            return P()
+        batch_dim_ok = _divisible(leaf.shape[1], mesh, dp) if leaf.ndim > 1 \
+            else False
+        b = dp if batch_dim_ok else None
+        if name in ("k", "v", "xk", "xv"):
+            # (L?, B, S, K, hd) — shard heads if divisible, else the
+            # sequence (SP decode), else replicate (tiny caches only)
+            S, K = leaf.shape[-3], leaf.shape[-2]
+            if kv_on_heads and K % msize == 0:
+                return P(*((None,) * (leaf.ndim - 4) + (b, None, "model",
+                                                        None)))
+            if S % msize == 0:
+                return P(*((None,) * (leaf.ndim - 4) + (b, "model", None,
+                                                        None)))
+            return P(*((None,) * (leaf.ndim - 4) + (b, None, None, None)))
+        if name in ("ssm", "ssm_tail"):
+            # (..., B, H, N, P): heads -> model
+            return P(*((None,) * (leaf.ndim - 4) + (b, "model", None, None)))
+        if name in ("conv", "conv_tail"):
+            # (..., B, W-1, conv_dim): channels -> model
+            return P(*((None,) * (leaf.ndim - 3) + (b, None, "model")))
+        return P()
+    return jax.tree_util.tree_map_with_path(spec, cache_shape)
+
+
+def logits_spec(mesh: Mesh) -> P:
+    return P(dp_axes(mesh), None, "model")
+
+
+def activation_spec(cfg: ModelConfig, mesh: Mesh) -> P:
+    """Residual-stream spec at layer boundaries (SP when enabled)."""
+    dp = dp_axes(mesh)
+    if cfg.seq_shard_activations:
+        return P(dp, "model", None)
+    return P(dp, None, None)
+
+
+def to_shardings(mesh: Mesh, specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,8 @@
+from . import checkpoint, compress, data, loop, optim
+from .optim import OptConfig, init_state, adamw_update
+from .checkpoint import CheckpointManager
+from .data import DataConfig, SyntheticLM, make_batch
+
+__all__ = ["checkpoint", "compress", "data", "loop", "optim",
+           "OptConfig", "init_state", "adamw_update", "CheckpointManager",
+           "DataConfig", "SyntheticLM", "make_batch"]

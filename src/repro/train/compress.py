@@ -1,0 +1,76 @@
+"""Gradient compression for the cross-pod (DCN) reduction.
+
+int8 per-tensor-row quantization with **error feedback** (residual from
+step N is added back at step N+1, making compression unbiased over time).
+The pod-axis all-reduce then moves 4x fewer bytes over DCN — the slowest
+fabric in the multi-pod mesh and the paper's "cross-GPU traffic is the
+bottleneck" lesson applied at pod scale.
+
+`compressed_psum` is exact about the wire format: int8 payload + one f32
+scale per row, summed in int32 over the pod axis (so it is what a real
+int8 DCN all-reduce would compute, not a float psum in disguise).
+Used inside shard_map over the "pod" axis (see train/loop.py and
+tests/test_compress.py).
+"""
+from __future__ import annotations
+
+import typing
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(g, axis: int = -1):
+    """g f32/bf16 -> (q int8, scale f32 per-row)."""
+    g32 = g.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(g32), axis=axis, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(g, error):
+    """One leaf: returns (dequantized g_hat, new error residual)."""
+    g32 = g.astype(jnp.float32) + error
+    q, scale = quantize(g32)
+    g_hat = dequantize(q, scale)
+    return g_hat, g32 - g_hat
+
+
+def compressed_psum(g, axis_name: str, error=None):
+    """int8-on-the-wire psum over `axis_name` (call inside shard_map).
+
+    Every participant quantizes with a *shared* scale (pmax of local
+    scales — one tiny f32 pre-exchange), psums int32 counts, dequantizes.
+    With error feedback the quantization residual re-enters next step.
+    """
+    g32 = g.astype(jnp.float32)
+    if error is not None:
+        g32 = g32 + error
+    local_scale = jnp.max(jnp.abs(g32), axis=-1, keepdims=True) / 127.0
+    scale = jax.lax.pmax(jnp.maximum(local_scale, 1e-12), axis_name)
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    mean = total.astype(jnp.float32) * scale / \
+        jax.lax.psum(1, axis_name)
+    new_error = g32 - dequantize(q, scale)
+    return mean, new_error
+
+
+def init_error_tree(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def wire_bytes(tree) -> typing.Tuple[int, int]:
+    """(compressed, uncompressed) DCN bytes per all-reduce of this tree."""
+    comp = unc = 0
+    for leaf in jax.tree.leaves(tree):
+        n = leaf.size
+        rows = n // (leaf.shape[-1] if leaf.ndim else 1)
+        comp += n + 4 * max(1, rows)        # int8 payload + f32 row scales
+        unc += n * 4
+    return comp, unc

@@ -1,0 +1,82 @@
+"""HLO analyzer tests — parsing real compiled programs (DP-1)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import analyze
+from repro.core.hlo import HloModule, _split_instruction
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_matmul_flops_match_xla():
+    x = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+    w = jax.ShapeDtypeStruct((512, 128), jnp.float32)
+    txt = _compile(lambda a, b: a @ b, x, w)
+    cost = analyze(txt)
+    assert cost.flops == pytest.approx(2 * 256 * 512 * 128, rel=0.05)
+
+
+def test_while_trip_count_scaling():
+    """jax.lax.scan body must be scaled by its trip count — the thing
+    XLA's own cost_analysis gets wrong."""
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+
+    def f(a):
+        def body(c, _):
+            return jnp.tanh(c @ c), None
+        out, _ = jax.lax.scan(body, a, None, length=12)
+        return out
+    txt = _compile(f, x)
+    cost = analyze(txt)
+    one_matmul = 2 * 128 ** 3
+    assert cost.flops >= 12 * one_matmul * 0.9
+    assert cost.unknown_trip_counts == 0
+
+
+def test_fori_loop_trip_count():
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+
+    def f(a):
+        return jax.lax.fori_loop(0, 7, lambda i, c: c @ c, a)
+    cost = analyze(_compile(f, x))
+    assert cost.flops >= 7 * 2 * 64 ** 3 * 0.9
+
+
+def test_split_instruction_tuple_with_comments():
+    line = ('  %w.1 = (s32[], bf16[16,4096]{1,0}, /*index=5*/f32[28]{0}) '
+            'while(%tuple.5), condition=%cond, body=%body')
+    import re
+    from repro.core.hlo import _COMMENT_RE
+    got = _split_instruction(_COMMENT_RE.sub("", line))
+    assert got is not None
+    name, type_str, opcode, rest = got
+    assert name == "w.1" and opcode == "while"
+    assert "bf16[16,4096]" in type_str
+
+
+def test_elementwise_bytes_counted():
+    x = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    cost = analyze(_compile(lambda a: a * 2 + 1, x))
+    nbytes = 1024 * 1024 * 4
+    assert cost.hbm_bytes >= 2 * nbytes * 0.9      # read + write at least
+
+
+def test_conditional_worst_case_branch():
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+
+    def f(a):
+        return jax.lax.cond(a[0, 0] > 0,
+                            lambda v: v @ v,        # expensive branch
+                            lambda v: v + 1.0, a)
+    cost = analyze(_compile(f, x))
+    assert cost.flops >= 2 * 128 ** 3 * 0.9
+
+
+def test_entry_detected():
+    x = jax.ShapeDtypeStruct((8,), jnp.float32)
+    mod = HloModule(_compile(lambda a: a + 1, x))
+    assert mod.entry is not None
+    assert mod.entry in mod.computations

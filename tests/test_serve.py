@@ -1,0 +1,65 @@
+"""Serving engine: continuous batching correctness + slot lifecycle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import api, get_config
+from repro.serve import Engine, Request
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _greedy_reference(cfg, params, prompt, n_new, max_seq=48):
+    cache = api.init_cache(cfg, 1, max_seq)
+    lg, cache = api.prefill(params, cfg, cache,
+                            {"tokens": jnp.asarray(prompt)[None]})
+    out = [int(jnp.argmax(lg[0]))]
+    for _ in range(n_new - 1):
+        lg, cache = api.decode_step(params, cfg, cache,
+                                    jnp.asarray([out[-1]], jnp.int32))
+        out.append(int(jnp.argmax(lg[0])))
+    return out
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b-smoke", "mamba2-1.3b-smoke"])
+def test_continuous_batching_exact(arch):
+    cfg = get_config(arch)
+    params = api.init(RNG, cfg)
+    prompt = np.array([5, 6, 7, 8], np.int32)
+    ref = _greedy_reference(cfg, params, prompt, 6)
+    eng = Engine(cfg, params, slots=3, max_seq=48)
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=6))
+    eng.submit(Request(uid=1, prompt=np.array([1, 2], np.int32),
+                       max_new_tokens=3))
+    eng.submit(Request(uid=2, prompt=np.array([9, 9, 9], np.int32),
+                       max_new_tokens=8))
+    done = eng.run_until_drained()
+    got = [r for r in done if r.uid == 0][0].output
+    assert got == ref
+
+
+def test_slot_reuse_and_drain():
+    cfg = get_config("qwen2-1.5b-smoke")
+    params = api.init(RNG, cfg)
+    eng = Engine(cfg, params, slots=2, max_seq=48)
+    rng = np.random.default_rng(0)
+    for i in range(7):                      # more requests than slots
+        eng.submit(Request(uid=i,
+                           prompt=rng.integers(0, cfg.vocab_size, 4),
+                           max_new_tokens=4))
+    done = eng.run_until_drained()
+    assert len(done) == 7
+    assert all(len(r.output) == 4 for r in done)
+    assert eng.stats()["active"] == 0 and eng.stats()["queued"] == 0
+
+
+def test_requests_respect_max_seq_cap():
+    cfg = get_config("qwen2-1.5b-smoke")
+    params = api.init(RNG, cfg)
+    eng = Engine(cfg, params, slots=1, max_seq=12)
+    eng.submit(Request(uid=0, prompt=np.arange(8, dtype=np.int32),
+                       max_new_tokens=100))
+    done = eng.run_until_drained()
+    assert done[0].done
+    assert len(done[0].output) <= 12 - 8 + 1

@@ -1,0 +1,102 @@
+"""System-model tests: chips, coordinator, faults, subgroup invariance."""
+import dataclasses
+
+import pytest
+
+from repro.core import (ChipSpec, SystemSpec, System, simulate,
+                        what_if_failure, what_if_straggler)
+from repro.core.hlo import CollectiveRecord, HloCost, TraceOp
+from repro.core.system import _RunOp
+from repro.core.trace import build_runops
+
+
+def _cost(n_devices=8, layers=4, flops=1e9, nbytes=1e6, coll_bytes=1e5):
+    """Synthetic HloCost: `layers` x (compute segment + ring all-reduce)."""
+    groups = [list(range(n_devices))]
+    cost = HloCost()
+    for i in range(layers):
+        cost.trace.append(TraceOp("compute", f"seg{i}", flops=flops,
+                                  hbm_bytes=nbytes))
+        rec = CollectiveRecord("all-reduce", f"ar{i}", coll_bytes,
+                               int(coll_bytes), int(coll_bytes), groups)
+        cost.collectives.append(rec)
+        cost.trace.append(TraceOp("collective", f"ar{i}", collective=rec))
+        cost.flops += flops
+        cost.hbm_bytes += nbytes
+    return cost
+
+
+SMALL = SystemSpec(pod_shape=(2, 4), num_pods=1)
+
+
+def test_simulate_completes_all_devices():
+    rep = simulate(cost=_cost(), spec=SMALL, device_limit=None)
+    assert rep.devices_done == 8
+    assert rep.collectives_completed == 4
+    assert rep.time_s > 0
+
+
+def test_compute_time_matches_roofline():
+    c = SMALL.chip
+    cost = HloCost(flops=1e9, hbm_bytes=1e3,
+                   trace=[TraceOp("compute", "seg", flops=1e9, hbm_bytes=1e3)])
+    rep = simulate(cost=cost, spec=SMALL, device_limit=1)
+    expect = 1e9 / c.peak_bf16_flops + c.op_launch_overhead_s
+    assert rep.time_s == pytest.approx(expect, rel=1e-6)
+
+
+def test_memory_bound_op_uses_hbm_time():
+    c = SMALL.chip
+    cost = HloCost(trace=[TraceOp("compute", "s", flops=1.0, hbm_bytes=1e9)])
+    rep = simulate(cost=cost, spec=SMALL, device_limit=1)
+    expect = 1e9 / c.hbm_bandwidth + c.op_launch_overhead_s
+    assert rep.time_s == pytest.approx(expect, rel=1e-6)
+
+
+def test_straggler_slows_whole_group():
+    """Paper's lesson: one slow chip delays every collective it joins."""
+    cost = _cost(n_devices=8, layers=4)
+    base, slow = what_if_straggler(cost, SMALL, device=3, slow_factor=4.0,
+                                   device_limit=None)
+    assert slow.time_s > base.time_s * 1.5
+    assert slow.devices_done == 8
+
+
+def test_failure_detection_via_collective_timeout():
+    cost = _cost(n_devices=8, layers=4)
+    rep = what_if_failure(cost, SMALL, device=2, deadline_s=0.001,
+                          device_limit=None)
+    assert rep.collective_timeouts >= 1
+    assert rep.devices_aborted >= 1          # survivors saw the timeout
+
+
+def test_subgroup_timing_invariant():
+    """Simulating a closed subgroup reproduces full-system SPMD timing."""
+    # two independent rings of 4: simulate all 8 vs just ring 0
+    groups = [[0, 1, 2, 3], [4, 5, 6, 7]]
+    cost = HloCost()
+    rec = CollectiveRecord("all-reduce", "ar", 1e6, int(1e6), int(1e6),
+                           groups)
+    cost.collectives.append(rec)
+    cost.trace = [TraceOp("compute", "seg", flops=1e9, hbm_bytes=1e6),
+                  TraceOp("collective", "ar", collective=rec)]
+    full = simulate(cost=cost, spec=SMALL, device_limit=None)
+    sub = simulate(cost=cost, spec=SMALL, device_limit=4)
+    assert sub.devices == 4
+    assert sub.time_s == pytest.approx(full.time_s, rel=1e-9)
+
+
+def test_trace_builder_caps_repeats():
+    cost = HloCost()
+    rec = CollectiveRecord("all-reduce", "ar", 1e4, int(1e4), int(1e4),
+                           [[0, 1]], count=128.0)
+    cost.trace = [TraceOp("compute", "c", flops=1e6, hbm_bytes=1e3,
+                          repeat=128.0),
+                  TraceOp("collective", "ar", collective=rec)]
+    runops = build_runops(cost, repeat_cap=16)
+    colls = [op for op in runops if op.kind == "collective"]
+    segs = [op for op in runops if op.kind == "compute"]
+    assert len(colls) == 16                  # capped
+    # total work preserved exactly
+    assert sum(op.bytes for op in colls) == pytest.approx(128 * 1e4)
+    assert sum(op.flops for op in segs) == pytest.approx(128 * 1e6)

@@ -1,0 +1,91 @@
+"""Topology analytics: replica-group parsing + collective cost formulas."""
+import pytest
+
+from repro.core import SystemSpec, Topology, parse_replica_groups
+
+
+def test_parse_iota_form():
+    groups = parse_replica_groups("replica_groups=[2,4]<=[8]")
+    assert groups == [[0, 1, 2, 3], [4, 5, 6, 7]]
+
+
+def test_parse_iota_transposed():
+    groups = parse_replica_groups("replica_groups=[4,2]<=[2,4]T(1,0)")
+    assert groups == [[0, 4], [1, 5], [2, 6], [3, 7]]
+
+
+def test_parse_list_form():
+    groups = parse_replica_groups("replica_groups={{0,1},{2,3}}")
+    assert groups == [[0, 1], [2, 3]]
+
+
+SPEC = SystemSpec(pod_shape=(4, 4), num_pods=2)
+
+
+def _topo():
+    return Topology(SPEC)
+
+
+def test_classify_groups():
+    t = _topo()
+    assert t.classify_group([0, 1, 2, 3]) == "ring_x"       # same y row
+    assert t.classify_group([0, 4, 8, 12]) == "ring_y"      # same x col
+    assert t.classify_group(list(range(16))) == "block_2d"
+    assert t.classify_group([0, 16]) == "cross_pod"
+    assert t.classify_group([3]) == "self"
+
+
+def test_ring_allreduce_time_formula():
+    t = _topo()
+    c = SPEC.chip
+    B, n = 1e6, 4
+    got = t.collective_time_s("all-reduce", B, [[0, 1, 2, 3]])
+    expect = 2 * (n - 1) / n * B / (2 * c.ici_link_bandwidth) \
+        + 2 * (n - 1) * c.ici_hop_latency_s
+    assert got == pytest.approx(expect, rel=1e-9)
+
+
+def test_allgather_half_of_allreduce():
+    t = _topo()
+    B = 1e7
+    ar = t.collective_time_s("all-reduce", B, [[0, 1, 2, 3]])
+    ag = t.collective_time_s("all-gather", B, [[0, 1, 2, 3]])
+    assert ar == pytest.approx(2 * ag, rel=0.2)   # ~2 phases vs 1
+
+
+def test_collective_permute_is_one_hop():
+    t = _topo()
+    c = SPEC.chip
+    got = t.collective_time_s("collective-permute", 5e5, [[0, 1]])
+    assert got == pytest.approx(5e5 / c.ici_link_bandwidth
+                                + c.ici_hop_latency_s, rel=1e-9)
+
+
+def test_cross_pod_uses_dcn():
+    t = _topo()
+    B = 1e8
+    groups = [[i, i + 16] for i in range(16)]     # pod-axis pairs
+    got = t.collective_time_s("all-reduce", B, groups)
+    # all 16 groups share pod DCN bandwidth
+    dcn = 16 * B * 2 * (2 - 1) / 2 / SPEC.dcn_bandwidth_per_pod
+    assert got >= dcn
+    assert t.dcn[0].bytes_total > 0
+
+
+def test_link_debits_accumulate():
+    t = _topo()
+    t.collective_time_s("all-reduce", 1e6, [[0, 1, 2, 3]])
+    rep = t.link_report()
+    assert rep["hottest_links"], "links must be debited"
+
+
+def test_singleton_group_free():
+    t = _topo()
+    assert t.collective_time_s("all-reduce", 1e9, [[5]]) == 0.0
+
+
+def test_bigger_payload_takes_longer():
+    t = _topo()
+    small = t.collective_time_s("all-to-all", 1e5, [list(range(16))])
+    big = t.collective_time_s("all-to-all", 1e7, [list(range(16))])
+    assert big > small

@@ -15,14 +15,14 @@ timeline simulator.  Expected replication of the paper's lesson:
 import sys
 
 import jax
+from repro.compat import make_auto_mesh
 import jax.numpy as jnp
 import numpy as np
 
 
 def main() -> int:
     from repro.patterns import WORKLOADS, evaluate
-    mesh = jax.make_mesh((4,), ("dev",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_auto_mesh((4,), ("dev",))
     sizes = {"aes": 64 * 1024, "km": 32 * 1024, "fir": 64 * 1024,
              "sc": 512, "gd": 16 * 1024, "mt": 512, "bs": 32 * 1024}
     print("name,us_per_call,derived")

@@ -14,8 +14,8 @@ import sys
 
 MODULES = [
     ("micro_validation", "Fig.6 — one-parameter micro-benchmarks"),
-    ("engine_parallelism", "Fig.2 — batch width per timestamp"),
-    ("engine_scalability", "Fig.8 — engine throughput + determinism"),
+    ("engine_parallelism", "Fig.2 — batch vs lookahead-window widths"),
+    ("engine_scalability", "Fig.8 — scheduler scaling -> BENCH_engine.json"),
     ("mgmark_validation", "Fig.7 — workload sim vs analytic bound"),
     ("case_study", "Fig.9 — U-mode vs D-mode traffic/time"),
     ("fault_tolerance", "straggler / failure / ckpt-interval what-ifs"),
@@ -39,6 +39,9 @@ def main() -> int:
             failures.append(mod)
             sys.stdout.write(f"[FAILED rc={proc.returncode}]\n"
                              + proc.stderr[-2000:] + "\n")
+    bench_json = os.path.join(repo, "BENCH_engine.json")
+    if os.path.exists(bench_json):
+        print(f"\nengine perf trajectory: {bench_json}")
     print(f"\n{len(MODULES) - len(failures)}/{len(MODULES)} benchmarks ok"
           + (f"; FAILED: {failures}" if failures else ""))
     return 1 if failures else 0

@@ -12,14 +12,14 @@ traffic from the compiled HLO, and simulated execution time on the
 four design lessons evaluated against our numbers.
 """
 import jax
+from repro.compat import make_auto_mesh
 import jax.numpy as jnp
 import numpy as np
 
 
 def main():
     from repro.patterns import WORKLOADS, evaluate
-    mesh = jax.make_mesh((4,), ("dev",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_auto_mesh((4,), ("dev",))
     sizes = {"aes": 64 * 1024, "km": 32 * 1024, "fir": 64 * 1024,
              "sc": 512, "gd": 16 * 1024, "mt": 512, "bs": 32 * 1024}
     rows = []

@@ -1,0 +1,60 @@
+"""Version compatibility shims for the pinned toolchain.
+
+The repo targets current jax, but the baked image may carry an older
+release where ``shard_map`` still lives under ``jax.experimental``.
+Import it from here so every module gets the same resolution order.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:  # jax >= 0.4.40 re-exports it at top level
+    from jax import shard_map as _shard_map
+except ImportError:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+if "check_vma" in inspect.signature(_shard_map).parameters:
+    shard_map = _shard_map
+else:
+    def shard_map(f, *args, **kwargs):
+        """Old-jax shim: ``check_vma`` was spelled ``check_rep``."""
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return _shard_map(f, *args, **kwargs)
+
+
+def make_auto_mesh(shape, axes):
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    import jax
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+
+
+def axis_size(axis_name) -> int:
+    """``jax.lax.axis_size`` with a fallback for jax versions predating it.
+
+    ``psum(1, axis)`` of a static value folds to the axis size as a
+    Python int without emitting a collective, so traffic analysis is
+    unaffected.
+    """
+    import jax
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a flat dict.
+
+    Older jax returns a one-element list of per-module dicts; newer jax
+    returns the dict directly. Either way the caller gets a dict.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
+__all__ = ["shard_map", "make_auto_mesh", "axis_size", "cost_analysis_dict"]

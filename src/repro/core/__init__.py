@@ -5,8 +5,10 @@ hooks — plus the TPU adaptation layers: chip/topology/system models, the
 machine-level HLO analyzer (DP-1), the trace builder and the timeline
 simulator + roofline report the assignment's perf loop runs on.
 """
-from .event import Event, EventQueue
-from .engine import Engine
+from .event import Event, EventQueue, LocalQueue
+from .engine import (Engine, Scheduler, RoundScheduler, SCHEDULERS,
+                     make_scheduler, register_scheduler, SerialScheduler,
+                     BatchParallelScheduler, LookaheadScheduler)
 from .component import Component, Port
 from .connection import Connection, LinkConnection, LimitedConnection, Request
 from .hooks import (Hook, HookCtx, Hookable, Tracer, MetricsHook, StallHook,
@@ -24,7 +26,10 @@ from .roofline import (RooflineTerms, build_terms, collective_sim_time,
                        model_flops_decode, attention_flops, format_table)
 
 __all__ = [
-    "Event", "EventQueue", "Engine", "Component", "Port",
+    "Event", "EventQueue", "LocalQueue", "Engine", "Scheduler",
+    "RoundScheduler", "SCHEDULERS", "make_scheduler", "register_scheduler",
+    "SerialScheduler", "BatchParallelScheduler", "LookaheadScheduler",
+    "Component", "Port",
     "Connection", "LinkConnection", "LimitedConnection", "Request",
     "Hook", "HookCtx", "Hookable", "Tracer", "MetricsHook", "StallHook",
     "FaultInjector", "EVENT_START", "EVENT_END", "REQ_SEND", "REQ_DELIVER",

@@ -45,6 +45,9 @@ class Component(Hookable):
         self.name = name
         self.engine = None          # set by Engine.register
         self.rank = 0               # set by Engine.register (deterministic)
+        self.cluster_id = 0         # set by Engine.compute_clusters: the
+                                    # sequential-execution group a windowed
+                                    # scheduler assigns this component to
         self.ports: dict = {}
         # Fault-injection inputs (written by FaultInjector hook, read here):
         self.fault_failed = False

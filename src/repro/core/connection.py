@@ -56,6 +56,22 @@ class Connection(Hookable):
         self.endpoints.append(port)
         return self
 
+    # -- scheduler interface -------------------------------------------------
+    @property
+    def min_latency_ps(self) -> int:
+        """Lower bound on the delay any send imposes before the
+        destination can observe it; the lookahead window derives from the
+        minimum of this over all registered connections."""
+        return self.latency_ps
+
+    @property
+    def stateful_send(self) -> bool:
+        """True when concurrent sends race on shared state, so a windowed
+        scheduler must fuse this connection with its endpoint owners into
+        one sequential cluster.  A plain connection's send only posts
+        events -- unless hooks are attached, which observe send order."""
+        return bool(self._hooks)
+
     # -- protocol -----------------------------------------------------------
     def can_accept(self, src_port) -> bool:
         return True
@@ -71,19 +87,33 @@ class Connection(Hookable):
             a, b = self.endpoints
             request.dst = b.owner if a is src_port else a.owner
 
+    def _post_transfer(self, request: Request, arrival_ps: int) -> None:
+        """Scheduler-safe commit path: both the connection's deliver event
+        and the destination's request event are posted *at send time*, a
+        full ``transfer_time >= min_latency_ps`` ahead.  This keeps every
+        cross-component event creation behind the connection's latency --
+        the invariant the lookahead window is derived from (the old
+        deliver-then-dispatch chain created the destination event with
+        zero delay from the deliver event, which would force the window
+        to zero)."""
+        self.engine.post(Event(time=arrival_ps, component=self,
+                               kind="deliver", payload=request))
+        self.engine.post(Event(time=arrival_ps, component=request.dst,
+                               kind="request", payload=request))
+
     def send(self, src_port, request: Request) -> bool:
         self._resolve_dst(src_port, request)
         self.invoke_hooks(REQ_SEND, self.engine.now, request)
-        self.engine.post(Event(time=self.engine.now + self.transfer_time_ps(request),
-                               component=self, kind="deliver", payload=request))
+        self._post_transfer(request,
+                            self.engine.now + self.transfer_time_ps(request))
         return True
 
     # -- engine interface (connections are event handlers too) ---------------
     def handle(self, event: Event) -> None:
         if event.kind == "deliver":
-            request: Request = event.payload
-            self.invoke_hooks(REQ_DELIVER, self.engine.now, request)
-            self.engine.dispatch_request(request.dst, request)
+            # bookkeeping/observation only; the destination's request
+            # event was posted at send time (see _post_transfer)
+            self.invoke_hooks(REQ_DELIVER, self.engine.now, event.payload)
 
     def notify_available(self, connection) -> None:  # pragma: no cover
         pass
@@ -102,6 +132,11 @@ class LinkConnection(Connection):
         self.busy_until_ps = 0
         self.bytes_total = 0
 
+    @property
+    def stateful_send(self) -> bool:
+        # senders serialize on busy_until_ps -> must share their cluster
+        return True
+
     def serialization_ps(self, size_bytes: int) -> int:
         return s_to_ps(size_bytes / self.bandwidth) if self.bandwidth else 0
 
@@ -112,8 +147,7 @@ class LinkConnection(Connection):
         done = start + self.serialization_ps(request.size_bytes)
         self.busy_until_ps = done
         self.bytes_total += request.size_bytes
-        self.engine.post(Event(time=done + self.latency_ps,
-                               component=self, kind="deliver", payload=request))
+        self._post_transfer(request, done + self.latency_ps)
         return True
 
 
@@ -140,10 +174,25 @@ class LimitedConnection(LinkConnection):
         self.in_flight += 1
         return super().send(src_port, request)
 
+    def _post_transfer(self, request: Request, arrival_ps: int) -> None:
+        # Only the deliver event is posted at send time: the freed slot
+        # must be visible BEFORE the destination handles the arrival (its
+        # handler may reply on this very connection), so the request
+        # event is dispatched from the deliver handler instead.  That
+        # zero-delay cross-component post is safe here because a
+        # stateful connection is always fused with its endpoint owners
+        # into one sequential cluster.
+        self.engine.post(Event(time=arrival_ps, component=self,
+                               kind="deliver", payload=request))
+
     def handle(self, event: Event) -> None:
         if event.kind == "deliver":
+            request: Request = event.payload
             self.in_flight -= 1
-            super().handle(event)
+            self.invoke_hooks(REQ_DELIVER, self.engine.now, request)
+            self.engine.post(Event(time=self.engine.now,
+                                   component=request.dst, kind="request",
+                                   payload=request))
             # wake exactly one waiter per freed slot, deterministically FIFO
             if self._waiting and self.in_flight < self.capacity:
                 waiter = self._waiting.pop(0)

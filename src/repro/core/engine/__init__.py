@@ -1,0 +1,17 @@
+"""Pluggable-scheduler simulation engine (see docs/engine.md).
+
+``Engine`` keeps its historical constructor (``parallel=`` maps to the
+batch scheduler) plus ``scheduler="serial"|"batch"|"lookahead"`` and
+accepts any :class:`Scheduler` instance for custom strategies.
+"""
+from .base import (Engine, Scheduler, RoundScheduler, SCHEDULERS,
+                   make_scheduler, register_scheduler)
+from .serial import SerialScheduler
+from .batch import BatchParallelScheduler
+from .lookahead import LookaheadScheduler
+
+__all__ = [
+    "Engine", "Scheduler", "RoundScheduler", "SCHEDULERS",
+    "make_scheduler", "register_scheduler",
+    "SerialScheduler", "BatchParallelScheduler", "LookaheadScheduler",
+]

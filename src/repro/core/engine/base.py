@@ -1,0 +1,414 @@
+"""Engine core + pluggable scheduler interface.
+
+The engine owns the registered components, the global event queue, the
+hook lists and the simulation clock; *how* events are drained is the job
+of a :class:`Scheduler`.  Three ship with the repo:
+
+* ``serial``     -- strict (time, rank, seq) order; the determinism oracle
+  (:mod:`repro.core.engine.serial`).
+* ``batch``      -- the paper's DP-5 conservative scheme: all events at
+  the earliest timestamp run concurrently, grouped per component
+  (:mod:`repro.core.engine.batch`).
+* ``lookahead``  -- conservative PDES with a safe time window derived
+  from the minimum cross-cluster connection latency; exploits
+  parallelism even when per-component timestamps diverge
+  (:mod:`repro.core.engine.lookahead`).
+
+All three must produce bit-identical simulation results; the parametrized
+determinism tests in ``tests/test_sim_engine.py`` assert it.  A fourth
+scheduler is one :func:`register_scheduler` call away (see
+``docs/engine.md``).
+
+Thread-safety contract: during a round, worker threads post events
+through a thread-local sink owned by the worker's own group context --
+no shared mutable state.  Posts from *foreign* threads (or outside a
+round) fall back to the global queue under ``_post_lock``; engine-level
+hooks always fire under ``_hook_lock``.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import threading
+import typing
+
+from ..event import Event, EventQueue, LocalQueue
+from ..hooks import Hookable, EVENT_START, EVENT_END
+
+
+# -- scheduler interface + registry -----------------------------------------
+
+class Scheduler:
+    """Strategy object that drains an :class:`Engine`'s event queue.
+
+    Subclasses implement :meth:`run`; they may assume exclusive use of
+    the bound engine for the duration of the call.  ``run`` returns the
+    timestamp of the last executed event (the simulation end time).
+    """
+
+    name = "abstract"
+
+    def __init__(self, max_workers: int = 4) -> None:
+        self.max_workers = max_workers
+        self.engine: "Engine" = None
+
+    def bind(self, engine: "Engine") -> "Scheduler":
+        self.engine = engine
+        return self
+
+    def run(self, until_ps: int = None) -> int:
+        raise NotImplementedError
+
+    def describe(self) -> dict:
+        return {"name": self.name, "max_workers": self.max_workers}
+
+
+SCHEDULERS: dict = {}
+
+
+def register_scheduler(name: str, factory) -> None:
+    """Make ``Engine(scheduler=name)`` resolve to ``factory(max_workers=N)``."""
+    SCHEDULERS[name] = factory
+
+
+def make_scheduler(spec, max_workers: int = 4) -> Scheduler:
+    """Resolve a scheduler name (or pass through an instance)."""
+    if isinstance(spec, Scheduler):
+        return spec
+    try:
+        factory = SCHEDULERS[spec]
+    except KeyError:
+        raise ValueError(f"unknown scheduler {spec!r}; "
+                         f"available: {sorted(SCHEDULERS)}") from None
+    return factory(max_workers=max_workers)
+
+
+# -- engine ------------------------------------------------------------------
+
+class Engine(Hookable):
+    def __init__(self, parallel: bool = False, max_workers: int = 4,
+                 scheduler=None) -> None:
+        super().__init__()
+        self.queue = EventQueue()
+        self._now_global = 0
+        self._tls = threading.local()
+        self.parallel = parallel            # legacy knob; maps to 'batch'
+        self.max_workers = max_workers
+        self._components: list = []
+        self._post_lock = threading.Lock()
+        self._hook_lock = threading.RLock()
+        self.events_processed = 0
+        self.batch_widths: list = []        # events per execution round
+        self.window_widths: list = []       # filled by windowed schedulers
+        if scheduler is None:
+            scheduler = "batch" if parallel else "serial"
+        self.scheduler = make_scheduler(scheduler,
+                                        max_workers=max_workers).bind(self)
+
+    # -- clock ----------------------------------------------------------------
+    @property
+    def now(self) -> int:
+        """Current simulation time.
+
+        Inside an event handler this is the handled event's timestamp
+        (thread-local, so concurrently executing groups each see their
+        own local time); outside handlers it is the global clock.
+        """
+        t = getattr(self._tls, "now", None)
+        return self._now_global if t is None else t
+
+    @now.setter
+    def now(self, value: int) -> None:
+        self._now_global = value
+
+    # -- registration ---------------------------------------------------------
+    def register(self, item) -> typing.Any:
+        """Register a component or connection; assigns deterministic rank."""
+        item.engine = self
+        item.rank = len(self._components)
+        self._components.append(item)
+        return item
+
+    # -- scheduling ------------------------------------------------------------
+    def post(self, event: Event) -> None:
+        assert event.time >= self.now, "cannot schedule into the past"
+        sink = getattr(self._tls, "sink", None)
+        if sink is not None:
+            sink(event)                     # this worker's own group context
+        else:
+            with self._post_lock:           # foreign thread / outside a round
+                self.queue.push(event)
+
+    # -- hooks ------------------------------------------------------------------
+    def invoke_hooks(self, position: str, time: int, item) -> None:
+        """Engine-level hooks are shared across worker threads -> locked."""
+        if not self._hooks:
+            return
+        with self._hook_lock:
+            super().invoke_hooks(position, time, item)
+
+    # -- execution ----------------------------------------------------------------
+    def _handle_one(self, event: Event) -> None:
+        """Run one event's handler with the clock pinned to its timestamp."""
+        comp = event.component
+        prev = getattr(self._tls, "now", None)
+        self._tls.now = event.time
+        try:
+            self.invoke_hooks(EVENT_START, event.time, event)
+            comp.invoke_hooks(EVENT_START, event.time, event)
+            if not getattr(comp, "fault_failed", False):
+                comp.handle(event)
+            comp.invoke_hooks(EVENT_END, event.time, event)
+            self.invoke_hooks(EVENT_END, event.time, event)
+        finally:
+            self._tls.now = prev
+
+    def run(self, until_ps: int = None) -> int:
+        """Drain the queue (or run past ``until_ps``) via the scheduler."""
+        return self.scheduler.run(until_ps)
+
+    # -- topology analysis (used by windowed schedulers) ---------------------
+    def compute_clusters(self) -> typing.List[int]:
+        """Partition registered items into sequential clusters.
+
+        A connection is *fused* with all its endpoint owners when its
+        send path can create same-time cross-component events (zero
+        latency) or mutates shared state senders race on (LinkConnection
+        occupancy, attached hooks -- ``Connection.stateful_send``).
+        Components inside one cluster must execute sequentially; distinct
+        clusters only interact through >= min-latency connections, which
+        is what makes the lookahead window safe.
+
+        Returns cluster id per rank and annotates each registered item
+        with ``item.cluster_id``.
+        """
+        n = len(self._components)
+        parent = list(range(n))
+
+        def find(i: int) -> int:
+            while parent[i] != i:
+                parent[i] = parent[parent[i]]
+                i = parent[i]
+            return i
+
+        def union(a: int, b: int) -> None:
+            ra, rb = find(a), find(b)
+            if ra != rb:
+                parent[max(ra, rb)] = min(ra, rb)
+
+        self._fused_connections: set = set()
+        for item in self._components:
+            endpoints = getattr(item, "endpoints", None)
+            if endpoints is None:
+                continue                    # not a connection
+            zero_lat = getattr(item, "min_latency_ps", 0) <= 0
+            if zero_lat or getattr(item, "stateful_send", False):
+                self._fused_connections.add(item.rank)
+                for port in endpoints:
+                    union(item.rank, port.owner.rank)
+
+        # normalize to dense ids ordered by lowest member rank
+        ids: dict = {}
+        clusters = []
+        for rank in range(n):
+            root = find(rank)
+            cid = ids.setdefault(root, len(ids))
+            clusters.append(cid)
+            self._components[rank].cluster_id = cid
+        return clusters
+
+    def min_cross_cluster_latency_ps(self) -> typing.Optional[int]:
+        """Smallest delay a non-fused connection can impose on a send.
+
+        This is the auto-derived lookahead window: no event executed at
+        time t can create a cross-cluster event before ``t + window``.
+        ``None`` means no cross-cluster channels exist at all (the window
+        is unbounded -- clusters never interact).
+        """
+        fused = getattr(self, "_fused_connections", set())
+        best = None
+        for item in self._components:
+            if getattr(item, "endpoints", None) is None:
+                continue
+            if item.rank in fused:
+                continue                    # intra-cluster only
+            lat = getattr(item, "min_latency_ps", 0)
+            if best is None or lat < best:
+                best = lat
+        return best
+
+
+# -- shared round machinery ---------------------------------------------------
+
+class _GroupCtx:
+    """One group's execution context for a single round.
+
+    Owns a local heap (the group's slice of the window plus events its
+    handlers push back into it) and a post log whose stamps reproduce the
+    order a serial engine would have posted in: (executing event's time,
+    snapshot generation, rank, seq, intra-handler index) -- generation
+    first among same-time events because serial runs a full snapshot
+    round across *all* ranks before any of that round's delay-0 posts.
+    Group execution is single-threaded, so none of this needs locks.
+    """
+
+    __slots__ = ("sched", "group_id", "window_end", "local", "posts",
+                 "executed", "max_time", "_exec_key", "_exec_gen",
+                 "_post_idx")
+
+    def __init__(self, sched: "RoundScheduler", group_id: int,
+                 window_end) -> None:
+        self.sched = sched
+        self.group_id = group_id
+        self.window_end = window_end
+        self.local = LocalQueue()
+        self.posts: list = []               # (stamp, event)
+        self.executed = 0
+        self.max_time = 0
+        self._exec_key = (0, 0, 0)
+        self._exec_gen = 0
+        self._post_idx = 0
+
+    def post(self, event: Event) -> None:
+        time, rank, seq = self._exec_key
+        stamp = (time, self._exec_gen, rank, seq, self._post_idx)
+        self._post_idx += 1
+        if (not self.sched.defer_all_posts
+                and self.sched.group_of(event.component) == self.group_id
+                and event.time < self.window_end):
+            # Same-timestamp posts inherit creator generation + 1 so they
+            # wait for the next snapshot round, like serial; later
+            # timestamps start fresh at generation 0.
+            gen = self._exec_gen + 1 if event.time == time else 0
+            self.local.push_new(event, generation=gen)
+        else:
+            if (self.sched.strict_window
+                    and event.time < self.window_end
+                    and self.sched.group_of(event.component) != self.group_id):
+                raise RuntimeError(
+                    f"lookahead safety violation: {event!r} targets another "
+                    f"cluster inside the window ending at {self.window_end}; "
+                    "route cross-component traffic through a Connection with "
+                    "latency >= the engine's lookahead window")
+            self.posts.append((stamp, event))
+
+    def execute(self) -> "_GroupCtx":
+        eng = self.sched.engine
+        tls = eng._tls
+        prev_sink = getattr(tls, "sink", None)
+        tls.sink = self.post
+        try:
+            while self.local:
+                gen, ev = self.local.pop()
+                self._exec_key = (ev.time, getattr(ev.component, "rank", 0),
+                                  ev.seq)
+                self._exec_gen = gen
+                self._post_idx = 0
+                eng._handle_one(ev)
+                self.executed += 1
+                self.max_time = ev.time     # heap order => non-decreasing
+        finally:
+            tls.sink = prev_sink
+        return self
+
+
+class RoundScheduler(Scheduler):
+    """Round-based executor: pop a window, run groups, commit posts.
+
+    Subclasses choose the window width (:meth:`window_end`) and the
+    grouping (:meth:`group_of`); ``use_pool`` turns on the worker pool.
+    The commit phase pushes newly created events in serial post order
+    (stamp order), so the global seqs -- and therefore all same-(time,
+    rank) tie-breaks -- are identical to serial execution.
+    """
+
+    use_pool = False
+    strict_window = False
+    record_window_widths = False
+    # One-tick windows must defer even same-group posts to the commit
+    # phase: a same-time post from a *lower-rank* group (e.g. a
+    # zero-latency connection's request) would otherwise be committed
+    # while the target group already ran its own same-time self-posts
+    # locally -- inverting serial's seq order between the two.  Windowed
+    # schedulers instead fuse zero-latency connections into the target's
+    # cluster, which keeps in-window local execution serial-ordered.
+    defer_all_posts = True
+
+    def window_end(self, t: int):
+        return t + 1                        # one integer-ps tick
+
+    def group_of(self, component) -> int:
+        return getattr(component, "rank", 0)
+
+    def prepare(self) -> None:
+        """Called once per ``run`` before the first round."""
+
+    def run(self, until_ps: int = None) -> int:
+        eng = self.engine
+        self.prepare()
+        pool = None
+        try:
+            while eng.queue:
+                t = eng.queue.peek_time()
+                if until_ps is not None and t > until_ps:
+                    break
+                eng.now = t
+                wend = self.window_end(t)
+                if until_ps is not None:
+                    wend = min(wend, until_ps + 1)
+                events = eng.queue.pop_window(wend)
+
+                if len(events) == 1 and not self.strict_window:
+                    # Degenerate round: no concurrency to set up.  With no
+                    # sink installed, posts push straight onto the global
+                    # queue in post order -- exactly serial semantics.
+                    # Strict schedulers skip this path so the unsafe-post
+                    # guard fires regardless of event density.
+                    ev = events[0]
+                    eng._handle_one(ev)
+                    eng.events_processed += 1
+                    eng.batch_widths.append(1)
+                    if self.record_window_widths:
+                        eng.window_widths.append(1)
+                    eng.now = ev.time
+                    continue
+
+                groups: dict = {}
+                for ev in events:
+                    gid = self.group_of(ev.component)
+                    groups.setdefault(gid, _GroupCtx(self, gid, wend)) \
+                          .local.adopt(ev)
+                tasks = [groups[g] for g in sorted(groups)]
+
+                if self.use_pool and len(tasks) > 1 and self.max_workers > 1:
+                    if pool is None:
+                        pool = concurrent.futures.ThreadPoolExecutor(
+                            self.max_workers)
+                    nchunk = min(self.max_workers, len(tasks))
+                    chunks = [tasks[i::nchunk] for i in range(nchunk)]
+                    list(pool.map(_run_chunk, chunks))
+                else:
+                    for ctx in tasks:
+                        ctx.execute()
+
+                executed = sum(ctx.executed for ctx in tasks)
+                eng.events_processed += executed
+                eng.batch_widths.append(executed)
+                if self.record_window_widths:
+                    eng.window_widths.append(executed)
+
+                posts: list = []
+                for ctx in tasks:
+                    posts.extend(ctx.posts)
+                posts.sort(key=lambda se: se[0])
+                for _, ev in posts:
+                    eng.queue.push(ev)
+                eng.now = max([t] + [ctx.max_time for ctx in tasks])
+        finally:
+            if pool is not None:
+                pool.shutdown()
+        return eng.now
+
+
+def _run_chunk(chunk) -> None:
+    for ctx in chunk:
+        ctx.execute()

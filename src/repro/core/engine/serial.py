@@ -1,0 +1,33 @@
+"""SerialScheduler -- the determinism oracle.
+
+Processes events strictly in ``(time, component_rank, seq)`` order with
+no pending buffers, no worker pool and no commit phase: every post goes
+straight onto the global queue and receives its seq immediately.  This
+is the reference semantics every other scheduler must reproduce
+bit-identically (asserted by ``tests/test_sim_engine.py``).
+"""
+from __future__ import annotations
+
+from .base import Scheduler, register_scheduler
+
+
+class SerialScheduler(Scheduler):
+    name = "serial"
+
+    def run(self, until_ps: int = None) -> int:
+        eng = self.engine
+        queue = eng.queue
+        while queue:
+            t = queue.peek_time()
+            if until_ps is not None and t > until_ps:
+                break
+            eng.now = t
+            batch = queue.pop_batch()
+            eng.batch_widths.append(len(batch))
+            for ev in batch:
+                eng._handle_one(ev)
+            eng.events_processed += len(batch)
+        return eng.now
+
+
+register_scheduler("serial", SerialScheduler)

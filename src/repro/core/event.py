@@ -65,11 +65,73 @@ class EventQueue:
         """
         if not self._heap:
             return []
-        t = self._heap[0][0]
-        batch = []
-        while self._heap and self._heap[0][0] == t:
-            batch.append(self.pop())
-        return batch
+        return self.pop_window(self._heap[0][0] + 1)
+
+    def pop_window(self, end_time) -> list:
+        """Pop every event with ``time < end_time`` in (time, rank, seq)
+        order — the unit of work of a lookahead window (conservative
+        PDES: the caller guarantees no event created inside the window
+        can target another component before ``end_time``)."""
+        out = []
+        while self._heap and self._heap[0][0] < end_time:
+            out.append(heapq.heappop(self._heap)[-1])
+        return out
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)
+
+
+class LocalQueue:
+    """Per-group working heap used inside one scheduler round.
+
+    Holds the group's slice of a popped window plus any events its own
+    handlers schedule back into the window.  Keys are (time, generation,
+    rank, seq):
+
+    * ``generation`` reproduces the serial engine's snapshot-round
+      semantics for same-timestamp chains: serial pops *all* events at
+      time t, runs them in (rank, seq) order, and any delay-0 posts they
+      make wait for the next same-t round.  A locally created event at
+      its creator's own timestamp therefore carries ``creator's
+      generation + 1`` so it sorts after every same-t event of the
+      current round regardless of rank; events created for a later
+      timestamp reset to generation 0 (serial would see them in that
+      timestamp's first snapshot).
+    * locally created events draw seqs from a high base so they sort
+      *after* every globally assigned seq at the same (time, gen, rank)
+      — exactly where serial's monotonically increasing post-time seqs
+      would put them.
+    """
+
+    LOCAL_SEQ_BASE = 1 << 60
+
+    def __init__(self) -> None:
+        self._heap: list = []
+        self._counter = itertools.count(self.LOCAL_SEQ_BASE)
+
+    def adopt(self, event: Event) -> None:
+        """Add an event already carrying a globally assigned seq."""
+        rank = getattr(event.component, "rank", 0)
+        heapq.heappush(self._heap, (event.time, 0, rank, event.seq, event))
+
+    def push_new(self, event: Event, generation: int = 0) -> Event:
+        """Add an event created during this round; assigns a local seq."""
+        event = dataclasses.replace(event, seq=next(self._counter))
+        rank = getattr(event.component, "rank", 0)
+        heapq.heappush(self._heap,
+                       (event.time, generation, rank, event.seq, event))
+        return event
+
+    def pop(self) -> tuple:
+        """Returns (generation, event) in (time, gen, rank, seq) order."""
+        entry = heapq.heappop(self._heap)
+        return entry[1], entry[-1]
+
+    def peek_time(self) -> int:
+        return self._heap[0][0]
 
     def __len__(self) -> int:
         return len(self._heap)

@@ -58,6 +58,11 @@ class SystemSpec:
     num_pods: int = 1
     dcn_bandwidth_per_pod: float = 1.6e12  # bytes/s aggregate per pod
     # (256-chip v5e pod = 64 hosts x ~25 GB/s effective NIC each)
+    # Control-plane hop between a device and the collective coordinator
+    # (one ICI-hop-class latency each way).  Also the only cross-chip
+    # channel in the component graph, so it bounds the conservative
+    # lookahead window the parallel engine derives (engine/lookahead.py).
+    ctrl_latency_s: float = 1.0e-6
 
     @property
     def chips_per_pod(self) -> int:

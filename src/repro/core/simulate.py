@@ -39,11 +39,18 @@ class SimReport:
     compute_busy_s: float          # max over simulated cores
     compute_util: float            # busy / end-to-end (bottleneck core)
     link_report: dict
+    scheduler: str = "serial"      # which engine scheduler produced this
     batch_widths: typing.List[int] = dataclasses.field(default_factory=list)
+    window_widths: typing.List[int] = dataclasses.field(default_factory=list)
+
+    # Execution artifacts (how the engine drained the queue) are excluded:
+    # summaries must be bit-identical across schedulers, and the
+    # parametrized determinism tests compare exactly this dict.
+    _EXECUTION_FIELDS = ("scheduler", "batch_widths", "window_widths")
 
     def summary(self) -> dict:
         return {k: v for k, v in dataclasses.asdict(self).items()
-                if k != "batch_widths"}
+                if k not in self._EXECUTION_FIELDS}
 
 
 def _select_devices(cost: HloCost, total: int,
@@ -75,11 +82,16 @@ def _select_devices(cost: HloCost, total: int,
 
 def simulate(hlo_text: str = None, cost: HloCost = None,
              spec: SystemSpec = None, parallel: bool = False,
+             scheduler: str = None, max_workers: int = 4,
              device_limit: typing.Optional[int] = 32,
              dtype_bits: int = 16, repeat_cap: int = 64,
              faults: dict = None, deadline_s: float = None,
              until_s: float = None) -> SimReport:
     """Simulate one compiled step on the modeled machine.
+
+    ``scheduler``: engine scheduler name ("serial" | "batch" |
+    "lookahead"); defaults to "batch" when ``parallel`` else "serial".
+    All schedulers produce bit-identical ``SimReport.summary()``s.
 
     ``faults``: {component_name: [(time_s, action, arg), ...]} — forwarded
     to :class:`FaultInjector` (times converted to ps).
@@ -88,12 +100,13 @@ def simulate(hlo_text: str = None, cost: HloCost = None,
     if cost is None:
         cost = analyze(hlo_text)
     spec = spec or SystemSpec()
-    system = System(spec, parallel=parallel, deadline_s=deadline_s)
+    system = System(spec, parallel=parallel, deadline_s=deadline_s,
+                    scheduler=scheduler, max_workers=max_workers)
     metrics = MetricsHook()
+    # Engine-level hook only: it already sees busy intervals + requests,
+    # and hooks attached directly to connections would mark them
+    # stateful_send, fusing clusters and shrinking engine parallelism.
     system.engine.accept_hook(metrics)
-    for conn in system.engine._components:
-        if hasattr(conn, "accept_hook") and conn is not system.engine:
-            pass  # engine-level hook already sees busy intervals + requests
     if faults:
         plan = {name: [(s_to_ps(t), a, arg) for (t, a, arg) in acts]
                 for name, acts in faults.items()}
@@ -119,7 +132,9 @@ def simulate(hlo_text: str = None, cost: HloCost = None,
         compute_busy_s=busy / 1e12,
         compute_util=(busy / 1e12) / t if t else 0.0,
         link_report=system.topology.link_report(),
+        scheduler=system.engine.scheduler.name,
         batch_widths=system.engine.batch_widths,
+        window_widths=system.engine.window_widths,
     )
 
 

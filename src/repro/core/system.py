@@ -146,8 +146,8 @@ class StarConnection(Connection):
     Routing lives in the connection — components still hold no peer
     references (DP-3)."""
 
-    def __init__(self, name: str, hub_port) -> None:
-        super().__init__(name)
+    def __init__(self, name: str, hub_port, latency_s: float = 0.0) -> None:
+        super().__init__(name, latency_s)
         self.hub = hub_port
         self.plug(hub_port)
 
@@ -173,9 +173,11 @@ class System:
     """A complete simulated machine, ready to replay device traces."""
 
     def __init__(self, spec: SystemSpec, parallel: bool = False,
-                 deadline_s: float = None) -> None:
+                 deadline_s: float = None, scheduler=None,
+                 max_workers: int = 4) -> None:
         self.spec = spec
-        self.engine = Engine(parallel=parallel)
+        self.engine = Engine(parallel=parallel, scheduler=scheduler,
+                             max_workers=max_workers)
         self.topology = Topology(spec)
         self.programs: typing.List[DeviceProgram] = []
         self.cores: typing.List[TensorCore] = []
@@ -183,8 +185,12 @@ class System:
         self.coordinator = self.engine.register(
             CollectiveCoordinator("coordinator", self.topology,
                                   deadline_s=deadline_s))
+        # The coordinator fabric carries the only cross-chip traffic, so
+        # its latency is what the lookahead scheduler's window derives
+        # from: per-chip clusters may run ctrl_latency ahead of each other.
         coll_conn = self.engine.register(
-            StarConnection("coll_fabric", self.coordinator.port("coll")))
+            StarConnection("coll_fabric", self.coordinator.port("coll"),
+                           latency_s=spec.ctrl_latency_s))
         for d in range(spec.total_chips):
             core = self.engine.register(TensorCore(f"chip{d}.core", spec.chip))
             hbm = self.engine.register(HbmController(f"chip{d}.hbm", spec.chip))

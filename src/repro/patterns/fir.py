@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
+from repro.compat import axis_size, shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 PATTERN = "adjacent"
@@ -50,7 +50,7 @@ def make_dmode(mesh):
     def local(x, taps):
         T = taps.shape[0]
         # halo: last T-1 samples of the LEFT neighbor (ring, shard 0 zero)
-        n = jax.lax.axis_size("dev")
+        n = axis_size("dev")
         idx = jax.lax.axis_index("dev")
         tail = x[-(T - 1):]
         halo = jax.lax.ppermute(tail, "dev",

@@ -11,7 +11,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
+from repro.compat import axis_size, shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 PATTERN = "gather"
@@ -49,7 +49,7 @@ def make_umode(mesh):
 
 def make_dmode(mesh):
     def local(X, y, w):
-        n = X.shape[0] * jax.lax.axis_size("dev")
+        n = X.shape[0] * axis_size("dev")
 
         def step(w, _):
             g_local = X.T @ (X @ w - y) / n

@@ -12,7 +12,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
+from repro.compat import axis_size, shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 PATTERN = "scatter"
@@ -37,7 +37,7 @@ def make_umode(mesh):
 
 def make_dmode(mesh):
     def local(x):                                  # x (Nl, N) local rows
-        m = jax.lax.axis_size("dev")
+        m = axis_size("dev")
         Nl = x.shape[0]
         blocks = x.reshape(Nl, m, Nl).transpose(1, 0, 2)   # (m, Nl, Nl)
         recv = jax.lax.all_to_all(blocks, "dev", split_axis=0,

@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
+from repro.compat import axis_size, shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.kernels.ref import stencil2d_ref
@@ -51,7 +51,7 @@ def make_umode(mesh):
 
 def make_dmode(mesh):
     def local(img, kern):
-        n = jax.lax.axis_size("dev")
+        n = axis_size("dev")
         idx = jax.lax.axis_index("dev")
         down = [(i, (i + 1) % n) for i in range(n)]
         up = [(i, (i - 1) % n) for i in range(n)]

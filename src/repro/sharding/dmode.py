@@ -30,7 +30,7 @@ import typing
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from repro.compat import axis_size, shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.models import layers as L
@@ -45,7 +45,7 @@ from repro.models.base import ModelConfig
 def _tp_attention(lp, h, cfg, positions, axis: str):
     """Column-parallel QKV (head shards), row-parallel WO, one psum."""
     B, S, _ = h.shape
-    m = jax.lax.axis_size(axis)
+    m = axis_size(axis)
     Hl = cfg.num_heads // m                     # local q heads
     q = h @ lp["wq"]                            # wq: (d, q_dim/m) local
     k = h @ lp["wk"]                            # kv replicated or sharded
@@ -153,7 +153,7 @@ def ep_moe_ffn(p, x, cfg: ModelConfig, axis: str = "model"):
     """Inside shard_map: x (T_local, d) local tokens; p holds the LOCAL
     expert slices (E_local = E/m on the expert axis) and a replicated
     router.  Two all_to_alls move each token to/from its experts."""
-    m = jax.lax.axis_size(axis)
+    m = axis_size(axis)
     T, d = x.shape
     E = cfg.num_experts
     El = E // m
@@ -207,7 +207,7 @@ def make_sp_decode_attention(mesh: Mesh, cfg: ModelConfig,
     "data"; returns attention(q, k_cache, v_cache, pos) -> (B,H,hd).
     Pass pos_spec=P("data") for per-slot (B,) positions."""
     def local(q, kc, vc, pos):
-        m = jax.lax.axis_size("model")
+        m = axis_size("model")
         idx = jax.lax.axis_index("model")
         Tl = kc.shape[1]
         start = idx * Tl

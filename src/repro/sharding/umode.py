@@ -64,7 +64,7 @@ def make_moe_shard_map(cfg: ModelConfig, mesh: Mesh):
     to a model-axis ALL-GATHER of every group's dispatch buffer — 16x the
     bytes of the all-to-all a discrete program writes (§Perf qwen3-moe
     iteration 2; 5.4 GB vs 0.34 GB per layer per device)."""
-    from jax import shard_map
+    from repro.compat import shard_map
     from . import dmode
 
     def local(pl, xl):

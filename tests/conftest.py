@@ -12,6 +12,8 @@ import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
+if REPO not in sys.path:          # make `benchmarks.*` importable in tests
+    sys.path.insert(0, REPO)
 
 _PRELUDE = """\
 import os
@@ -19,6 +21,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n}"
 import sys
 sys.path.insert(0, {src!r})
 import jax
+from repro.compat import make_auto_mesh
 """
 
 

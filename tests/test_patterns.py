@@ -30,7 +30,7 @@ def test_aes_jnp_matches_numpy_oracle():
 
 _PATTERN_SCRIPT = """
 import jax, jax.numpy as jnp, numpy as np
-mesh = jax.make_mesh((4,), ("dev",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_auto_mesh((4,), ("dev",))
 from repro.patterns import WORKLOADS, evaluate
 sizes = {{"aes": 8192, "km": 2048, "fir": 8192, "sc": 128, "gd": 2048,
          "mt": 128, "bs": 2048}}

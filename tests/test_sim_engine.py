@@ -1,11 +1,16 @@
-"""Engine tests: ordering, conservative parallelism, DP-6 notifications."""
+"""Engine tests: ordering, conservative parallelism, DP-6 notifications,
+scheduler equivalence (serial == batch == lookahead, bit-identical)."""
 import random
+import threading
 
 import pytest
 
 from repro.core import (Component, Connection, Engine, Event,
-                        LimitedConnection, LinkConnection, MetricsHook,
-                        Request, s_to_ps)
+                        LimitedConnection, LinkConnection, LookaheadScheduler,
+                        MetricsHook, Request, SCHEDULERS, SystemSpec,
+                        s_to_ps, simulate)
+
+ALL_SCHEDULERS = ("serial", "batch", "lookahead")
 
 
 class Ticker(Component):
@@ -151,3 +156,363 @@ def test_metrics_hook_counts_bytes():
     eng.run()
     assert m.bytes_sent["l"] == 4096
     assert m.requests["l"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Pluggable schedulers: serial is the oracle; batch and lookahead must be
+# bit-identical to it on every workload (the MGSim property).
+# ---------------------------------------------------------------------------
+
+def _build_sched(scheduler, seed=0, max_workers=4):
+    eng = Engine(scheduler=scheduler, max_workers=max_workers)
+    rng = random.Random(seed)
+    comps = [eng.register(Ticker(f"t{i}", [rng.randint(1, 5) * 100
+                                           for _ in range(20)]))
+             for i in range(8)]
+    for c in comps:
+        c.start()
+    end = eng.run()
+    return [(c.name, tuple(c.log)) for c in comps], eng, end
+
+
+def test_scheduler_registry_has_all_three():
+    for name in ALL_SCHEDULERS:
+        assert name in SCHEDULERS
+
+
+@pytest.mark.parametrize("scheduler", ALL_SCHEDULERS[1:])
+def test_scheduler_bit_identical_to_serial(scheduler):
+    oracle, eng_s, end_s = _build_sched("serial")
+    got, eng_p, end_p = _build_sched(scheduler)
+    assert got == oracle
+    assert end_p == end_s
+    assert eng_p.events_processed == eng_s.events_processed
+
+
+def _build_jitter(scheduler, n=8, ticks=120):
+    """Divergent-latency trace: the regime where same-timestamp batching
+    degrades to width 1 and the lookahead window recovers parallelism.
+    JitterNode is the engine_scalability benchmark's workload -- shared
+    so the test asserts determinism of exactly what the benchmark times."""
+    from benchmarks.engine_scalability import JitterNode
+    eng = Engine(scheduler=scheduler)
+    nodes = [eng.register(JitterNode(f"n{i}", i, ticks, send_every=20))
+             for i in range(n)]
+    for i in range(n):
+        conn = eng.register(Connection(f"ring{i}", latency_s=4e-9))
+        conn.plug(nodes[i].port("out")).plug(nodes[(i + 1) % n].port("in"))
+    for nd in nodes:
+        nd.start()
+    end = eng.run()
+    return [(nd.sig, nd.count, nd.received) for nd in nodes], eng, end
+
+
+@pytest.mark.parametrize("scheduler", ALL_SCHEDULERS[1:])
+def test_scheduler_bit_identical_on_divergent_trace(scheduler):
+    oracle, eng_s, end_s = _build_jitter("serial")
+    got, eng_p, end_p = _build_jitter(scheduler)
+    assert got == oracle and end_p == end_s
+    assert eng_p.events_processed == eng_s.events_processed
+
+
+def test_lookahead_window_derived_from_min_latency():
+    _, eng, _ = _build_jitter("lookahead")
+    assert eng.scheduler.window_ps == s_to_ps(4e-9)
+    # windows actually group diverged timestamps (batch would be ~1 wide)
+    assert max(eng.window_widths) > 8
+
+
+def test_lookahead_fuses_stateful_connections():
+    """LinkConnection senders race on busy_until_ps, so the lookahead
+    scheduler must place both endpoint owners in one sequential cluster."""
+    eng = Engine(scheduler="lookahead")
+    a = eng.register(Sink("a"))
+    b = eng.register(Sink("b"))
+    link = eng.register(LinkConnection("l", bandwidth=1e9, latency_s=1e-6))
+    link.plug(a.port("p")).plug(b.port("p"))
+    eng.compute_clusters()
+    assert a.cluster_id == b.cluster_id == link.cluster_id
+    # and with every connection fused there is no cross-cluster channel
+    assert eng.min_cross_cluster_latency_ps() is None
+
+
+class RogueDispatcher(Component):
+    """Posts a zero-latency event to a foreign component, bypassing the
+    connection system -- exactly what the lookahead window cannot allow."""
+
+    def __init__(self, name, victim):
+        super().__init__(name)
+        self.victim = victim
+
+    def start(self):
+        self.schedule("go", 0)
+
+    def handle(self, event):
+        if event.kind == "go":
+            self.engine.post(Event(time=self.engine.now,
+                                   component=self.victim, kind="attack"))
+
+
+def test_lookahead_detects_unsafe_cross_cluster_post():
+    eng = Engine(scheduler="lookahead")
+    victim = eng.register(Ticker("v", [100, 100]))
+    rogue = eng.register(RogueDispatcher("r", victim))
+    # a (stateless, nonzero-latency) connection keeps the clusters apart
+    # and sets a finite window
+    conn = eng.register(Connection("c", latency_s=1e-6))
+    conn.plug(rogue.port("x")).plug(victim.port("x"))
+    victim.start()
+    rogue.start()
+    with pytest.raises(RuntimeError, match="lookahead safety violation"):
+        eng.run()
+
+
+def test_serial_batch_identical_under_legacy_flag():
+    """Engine(parallel=True) still maps to the batch scheduler."""
+    eng = Engine(parallel=True)
+    assert eng.scheduler.name == "batch"
+    assert Engine().scheduler.name == "serial"
+
+
+def test_custom_scheduler_instance_accepted():
+    eng = Engine(scheduler=LookaheadScheduler(max_workers=2,
+                                              lookahead_ps=12345))
+    c = eng.register(Ticker("t", [100]))
+    c.start()
+    eng.run()
+    assert eng.scheduler.window_ps == 12345
+    assert eng.events_processed == 1
+
+
+# ---------------------------------------------------------------------------
+# Scheduler equivalence on the MGMark-analog system traces (SimReport level)
+# ---------------------------------------------------------------------------
+
+def _summaries(cost, spec, **kw):
+    reps = {s: simulate(cost=cost, spec=spec, scheduler=s, **kw)
+            for s in ALL_SCHEDULERS}
+    return reps
+
+
+def test_schedulers_identical_on_engine_parallelism_trace():
+    from benchmarks.engine_parallelism import synthetic_workload
+    spec = SystemSpec(pod_shape=(4, 4))
+    reps = _summaries(synthetic_workload(16, layers=6), spec,
+                      device_limit=None)
+    oracle = reps["serial"]
+    for name in ALL_SCHEDULERS[1:]:
+        rep = reps[name]
+        assert rep.summary() == oracle.summary()
+        assert rep.time_s == oracle.time_s
+        assert rep.events == oracle.events
+        assert rep.link_report == oracle.link_report
+    # lookahead recorded genuine multi-timestamp windows on this trace
+    assert reps["lookahead"].window_widths
+    assert len(reps["lookahead"].window_widths) < len(oracle.batch_widths)
+
+
+@pytest.fixture(scope="module")
+def quickstart_cost():
+    """The quickstart example's analysis step: compile the smoke model's
+    loss and analyze the machine-level HLO (same code path as
+    examples/quickstart.py step 4)."""
+    jax = pytest.importorskip("jax")
+    from repro.core import analyze
+    from repro.models import api, get_config
+    cfg = get_config("qwen2-1.5b-smoke")
+    batch = {"tokens": jax.ShapeDtypeStruct((2, 16), jax.numpy.int32),
+             "targets": jax.ShapeDtypeStruct((2, 16), jax.numpy.int32)}
+    compiled = jax.jit(lambda p, b: api.loss(p, cfg, b)).lower(
+        jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0), cfg)),
+        batch).compile()
+    return analyze(compiled.as_text())
+
+
+def test_schedulers_identical_on_quickstart_trace(quickstart_cost):
+    from repro.core import SINGLE_POD
+    reps = _summaries(quickstart_cost, SINGLE_POD, device_limit=1)
+    oracle = reps["serial"]
+    for name in ALL_SCHEDULERS[1:]:
+        assert reps[name].summary() == oracle.summary()
+    assert oracle.time_s > 0 and oracle.events > 0
+
+
+# ---------------------------------------------------------------------------
+# Engine.post thread-safety: posts from foreign threads must hit the global
+# queue under the lock (the pre-refactor engine appended to a shared pending
+# list outside it and could drop/corrupt entries under contention).
+# ---------------------------------------------------------------------------
+
+class Counter(Component):
+    def __init__(self, name):
+        super().__init__(name)
+        self.handled = 0
+
+    def handle(self, event):
+        self.handled += 1
+
+
+def test_post_is_thread_safe_under_contention():
+    eng = Engine(scheduler="serial")
+    comps = [eng.register(Counter(f"c{i}")) for i in range(4)]
+    n_threads, per_thread = 16, 500
+    start = threading.Barrier(n_threads)
+
+    def flood(tid):
+        start.wait()
+        for k in range(per_thread):
+            eng.post(Event(time=(tid * per_thread + k) % 1000 + 1,
+                           component=comps[tid % len(comps)], kind="w"))
+
+    threads = [threading.Thread(target=flood, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(eng.queue) == n_threads * per_thread
+    eng.run()
+    assert eng.events_processed == n_threads * per_thread
+    assert sum(c.handled for c in comps) == n_threads * per_thread
+
+
+class ZeroDelayMixer(Component):
+    """On tick: self-schedules a delay-0 follow-up AND is the target of a
+    same-time request from a zero-latency connection -- serial's seq
+    order between the two is the regression surface for round-based
+    schedulers (same-group self-posts must not jump ahead of same-time
+    cross-group posts)."""
+
+    def __init__(self, name):
+        super().__init__(name)
+        self.order = []
+
+    def handle(self, event):
+        self.order.append((self.engine.now, event.kind,
+                           getattr(event.payload, "kind", event.payload)))
+        if event.kind == "tick":
+            self.schedule("after", 0, payload="self")
+
+
+class SameTimeSender(Component):
+    def __init__(self, name, when):
+        super().__init__(name)
+        self.when = when
+
+    def start(self):
+        self.schedule("fire", self.when)
+
+    def handle(self, event):
+        if event.kind == "fire":
+            self.port("out").send(Request(src=self.port("out"), dst=None,
+                                          kind="poke", size_bytes=0))
+
+
+def _build_zero_delay(scheduler):
+    eng = Engine(scheduler=scheduler)
+    mixer = eng.register(ZeroDelayMixer("mix"))
+    sender = eng.register(SameTimeSender("send", when=100))
+    conn = eng.register(Connection("c0"))          # zero latency
+    conn.plug(sender.port("out")).plug(mixer.port("in"))
+    mixer.schedule("tick", 100)                    # collides with the poke
+    sender.start()
+    eng.run()
+    return tuple(mixer.order)
+
+
+@pytest.mark.parametrize("scheduler", ALL_SCHEDULERS[1:])
+def test_same_time_self_post_vs_cross_post_order(scheduler):
+    """Regression: batch once ran same-time self-posts locally within the
+    round, ahead of same-time cross-group posts serial would run first."""
+    assert _build_zero_delay(scheduler) == _build_zero_delay("serial")
+
+
+class DelayZeroChainer(Component):
+    """tick -> delay-0 'after' -> send; a lower-rank delay-0 chain must
+    NOT overtake a higher-rank same-time event on a shared link."""
+
+    def __init__(self, name, sink):
+        super().__init__(name)
+        self.sink = sink
+
+    def handle(self, event):
+        if event.kind == "tick":
+            self.schedule("after", 0)
+        elif event.kind == "after":
+            self.port("o").send(Request(src=self.port("o"), dst=self.sink,
+                                        kind="a_msg", size_bytes=1000))
+
+
+class DirectSender(Component):
+    def __init__(self, name, sink):
+        super().__init__(name)
+        self.sink = sink
+
+    def handle(self, event):
+        if event.kind == "tick":
+            self.port("o").send(Request(src=self.port("o"), dst=self.sink,
+                                        kind="c_msg", size_bytes=1000))
+
+
+class TimedSink(Component):
+    def __init__(self, name):
+        super().__init__(name)
+        self.log = []
+
+    def handle(self, event):
+        if event.kind == "request":
+            self.log.append((self.engine.now, event.payload.kind))
+
+
+def _build_delay_zero_chain(scheduler):
+    eng = Engine(scheduler=scheduler, max_workers=4)
+    sink = eng.register(TimedSink("s"))
+    a = eng.register(DelayZeroChainer("a", sink))     # lower rank
+    c = eng.register(DirectSender("c", sink))         # higher rank
+    link = eng.register(LinkConnection("l", bandwidth=1e9, latency_s=1e-6))
+    link.plug(a.port("o"))
+    link.plug(c.port("o"))
+    link.plug(sink.port("in"))
+    a.schedule("tick", 100)
+    c.schedule("tick", 100)
+    eng.run()
+    return tuple(sink.log)
+
+
+@pytest.mark.parametrize("scheduler", ALL_SCHEDULERS[1:])
+def test_delay_zero_chain_keeps_snapshot_round_order(scheduler):
+    """Regression: lookahead once ran a lower-rank delay-0 follow-up
+    before a same-time higher-rank event in the same fused cluster,
+    reversing link occupancy vs serial's snapshot-round semantics."""
+    assert _build_delay_zero_chain(scheduler) == _build_delay_zero_chain("serial")
+
+
+class Echo(Component):
+    """Replies on the SAME LimitedConnection from inside its request
+    handler -- only possible if the freed slot is visible before the
+    arrival is handled (DP-6 slot-reuse semantics)."""
+
+    def __init__(self, name):
+        super().__init__(name)
+        self.reply_ok = []
+
+    def handle(self, event):
+        if event.kind == "request" and event.payload.kind == "ask":
+            self.reply_ok.append(self.port("p").send(Request(
+                src=self.port("p"), dst=event.payload.src.owner,
+                kind="answer", size_bytes=64)))
+
+
+@pytest.mark.parametrize("scheduler", ALL_SCHEDULERS)
+def test_limited_connection_slot_free_before_handling(scheduler):
+    eng = Engine(scheduler=scheduler)
+    asker = eng.register(Sink("asker"))
+    echo = eng.register(Echo("echo"))
+    conn = eng.register(LimitedConnection("lim", bandwidth=64e9,
+                                          latency_s=1e-6, capacity=1))
+    conn.plug(asker.port("p")).plug(echo.port("p"))
+    asker.port("p").send(Request(src=asker.port("p"), dst=None, kind="ask",
+                                 size_bytes=64))
+    eng.run()
+    assert echo.reply_ok == [True]          # slot was free at handling time
+    assert asker.received == 1              # the reply arrived

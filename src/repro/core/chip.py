@@ -9,7 +9,9 @@ requesting DeviceProgram when done.
 
 Stragglers: the FaultInjector hook sets ``fault_slow_factor`` (read here,
 mutated nowhere else) -- compute durations stretch, and collectives that
-include this chip stretch with it.
+include this chip stretch with it.  (Interconnect-side stragglers --
+degraded links -- live in the fabric components instead:
+``repro.fabric.event.FabricLink`` reads the same flag.)
 """
 from __future__ import annotations
 

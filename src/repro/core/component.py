@@ -71,8 +71,11 @@ class Component(Hookable):
         raise NotImplementedError
 
     def notify_available(self, connection) -> None:
-        """Called by a capacity-limited connection when it frees up (DP-6:
-        components never poll; they are notified).  Default: no-op."""
+        """Invoked when a capacity-limited connection frees up (DP-6:
+        components never poll; they are notified).  Delivered as a posted
+        ``notify_available`` event on the timeline -- the engine routes it
+        here -- so waiters may live in other scheduler clusters.
+        Default: no-op."""
 
     # -- convenience --------------------------------------------------------
     def mark_busy(self, start_ps: int, end_ps: int, tag: str) -> None:

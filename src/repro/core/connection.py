@@ -19,14 +19,11 @@ rejected sender, notifying it via ``notify_available`` when space frees
 from __future__ import annotations
 
 import dataclasses
-import itertools
 import typing
 
 from .event import Event
 from .hooks import Hookable, REQ_SEND, REQ_DELIVER
 from .hw import s_to_ps
-
-_req_ids = itertools.count()
 
 
 @dataclasses.dataclass
@@ -36,7 +33,6 @@ class Request:
     kind: str
     size_bytes: int = 0
     payload: typing.Any = None
-    rid: int = dataclasses.field(default_factory=lambda: next(_req_ids))
 
 
 class Connection(Hookable):
@@ -118,6 +114,11 @@ class Connection(Hookable):
     def notify_available(self, connection) -> None:  # pragma: no cover
         pass
 
+    def reclaim(self, waiter) -> None:  # pragma: no cover
+        """Release any wake reservation held by ``waiter``.  Called by the
+        engine when a ``notify_available`` event could not be delivered
+        (the waiter failed) so the slot is not stranded.  Default: no-op."""
+
 
 class LinkConnection(Connection):
     """Bandwidth-limited, serialized link (one message at a time).
@@ -160,17 +161,27 @@ class LimitedConnection(LinkConnection):
         self.capacity = capacity
         self.in_flight = 0
         self._waiting: list = []   # rejected sender components, FIFO
+        self._promised: list = []  # woken waiters holding a slot reservation
 
     def can_accept(self, src_port) -> bool:
-        return self.in_flight < self.capacity
+        free = self.capacity - self.in_flight
+        if src_port.owner in self._promised:
+            return free > 0
+        # slots reserved for already-woken waiters are off limits: the
+        # wake travels as a posted event, so without the reservation a
+        # same-timestamp sender could steal the slot and starve the FIFO
+        return free > len(self._promised)
 
     def send(self, src_port, request: Request) -> bool:
-        if self.in_flight >= self.capacity:
+        owner = src_port.owner
+        if not self.can_accept(src_port):
             # reject and remember who to notify -- the sender must NOT retry
             # every cycle; it will get a notify_available callback.
-            if src_port.owner not in self._waiting:
-                self._waiting.append(src_port.owner)
+            if owner not in self._waiting and owner not in self._promised:
+                self._waiting.append(owner)
             return False
+        if owner in self._promised:
+            self._promised.remove(owner)
         self.in_flight += 1
         return super().send(src_port, request)
 
@@ -193,9 +204,37 @@ class LimitedConnection(LinkConnection):
             self.engine.post(Event(time=self.engine.now,
                                    component=request.dst, kind="request",
                                    payload=request))
-            # wake exactly one waiter per freed slot, deterministically FIFO
-            if self._waiting and self.in_flight < self.capacity:
-                waiter = self._waiting.pop(0)
-                waiter.notify_available(self)
+            # wake exactly one waiter per freed slot, deterministically
+            # FIFO.  The wake is a posted *notification event*, not a
+            # synchronous call from this handler: the waiter re-enters
+            # through the ordinary event loop (the engine dispatches
+            # kind="notify_available" to Component.notify_available), so
+            # a waiter may in principle live in another scheduler
+            # cluster.  (Today LimitedConnection is stateful_send and
+            # therefore fused with its endpoint owners anyway, which is
+            # what makes the same-timestamp post window-safe.)  The freed
+            # slot is *reserved* for the woken waiter until its next send
+            # -- events between the wake and its delivery cannot steal it.
+            self._wake_next()
         else:  # pragma: no cover
             super().handle(event)
+
+    def _wake_next(self) -> None:
+        if self._waiting and \
+                self.in_flight + len(self._promised) < self.capacity:
+            waiter = self._waiting.pop(0)
+            self._promised.append(waiter)
+            self.engine.post(Event(time=self.engine.now,
+                                   component=waiter,
+                                   kind="notify_available",
+                                   payload=self))
+
+    def reclaim(self, waiter) -> None:
+        """A promised waiter died before its wake arrived: release the
+        reservation and pass the slot to the next FIFO waiter, so a dead
+        component cannot strand idle capacity."""
+        if waiter in self._promised:
+            self._promised.remove(waiter)
+        if waiter in self._waiting:
+            self._waiting.remove(waiter)
+        self._wake_next()

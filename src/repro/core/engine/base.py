@@ -156,7 +156,16 @@ class Engine(Hookable):
             self.invoke_hooks(EVENT_START, event.time, event)
             comp.invoke_hooks(EVENT_START, event.time, event)
             if not getattr(comp, "fault_failed", False):
-                comp.handle(event)
+                if event.kind == "notify_available":
+                    # DP-6 wake posted by a capacity-limited connection;
+                    # dispatched to the dedicated callback so components
+                    # need not pattern-match it inside handle().
+                    comp.notify_available(event.payload)
+                else:
+                    comp.handle(event)
+            elif event.kind == "notify_available":
+                # the waiter died holding a slot reservation: hand it back
+                event.payload.reclaim(comp)
             comp.invoke_hooks(EVENT_END, event.time, event)
             self.invoke_hooks(EVENT_END, event.time, event)
         finally:

@@ -111,12 +111,18 @@ class StallHook(Hook):
 
 
 class FaultInjector(Hook):
-    """Injects failures / stragglers into chips at given times.
+    """Injects failures / stragglers into components at given times.
 
     ``plan`` maps component-name -> list of (time_ps, action, arg):
-      * ("fail", None)           -- chip stops handling events
-      * ("slow", factor)         -- compute durations multiplied by factor
+      * ("fail", None)           -- component stops handling events
+      * ("slow", factor)         -- durations multiplied by factor
       * ("recover", None)        -- undo both
+
+    Targets are chips (``chip3.core`` compute straggler, ``chip3.prog``
+    failure) and, under the event fabric, individual interconnect links
+    and DMA engines (``fabric.pod0.ici[0,1]+x`` -> a *straggler link*:
+    every transfer crossing it stretches by ``factor``; see
+    docs/fabric.md).
     The injector flips flags that well-behaved components consult inside
     their own ``handle`` -- state is still only mutated by the owner
     (no-magic is preserved: the hook only sets an *input* flag the

@@ -63,6 +63,10 @@ class SystemSpec:
     # channel in the component graph, so it bounds the conservative
     # lookahead window the parallel engine derives (engine/lookahead.py).
     ctrl_latency_s: float = 1.0e-6
+    # Interconnect model: a repro.fabric backend name -- "analytic"
+    # (closed-form pricing, the fast path) or "event" (per-hop transfer
+    # events with link contention).  See docs/fabric.md.
+    fabric: str = "analytic"
 
     @property
     def chips_per_pod(self) -> int:

@@ -39,6 +39,8 @@ class SimReport:
     compute_busy_s: float          # max over simulated cores
     compute_util: float            # busy / end-to-end (bottleneck core)
     link_report: dict
+    fabric: str = "analytic"       # which interconnect backend priced it
+    link_utilization: dict = dataclasses.field(default_factory=dict)
     scheduler: str = "serial"      # which engine scheduler produced this
     batch_widths: typing.List[int] = dataclasses.field(default_factory=list)
     window_widths: typing.List[int] = dataclasses.field(default_factory=list)
@@ -83,6 +85,7 @@ def _select_devices(cost: HloCost, total: int,
 def simulate(hlo_text: str = None, cost: HloCost = None,
              spec: SystemSpec = None, parallel: bool = False,
              scheduler: str = None, max_workers: int = 4,
+             fabric: str = None,
              device_limit: typing.Optional[int] = 32,
              dtype_bits: int = 16, repeat_cap: int = 64,
              faults: dict = None, deadline_s: float = None,
@@ -93,15 +96,22 @@ def simulate(hlo_text: str = None, cost: HloCost = None,
     "lookahead"); defaults to "batch" when ``parallel`` else "serial".
     All schedulers produce bit-identical ``SimReport.summary()``s.
 
+    ``fabric``: interconnect backend name ("analytic" | "event");
+    defaults to ``spec.fabric``.  See docs/fabric.md.
+
     ``faults``: {component_name: [(time_s, action, arg), ...]} — forwarded
-    to :class:`FaultInjector` (times converted to ps).
+    to :class:`FaultInjector` (times converted to ps).  With the event
+    fabric the plan may also target links / DMA engines by name, e.g.
+    ``{"fabric.pod0.ici[0,1]+x": [(0.0, "slow", 8.0)]}`` for a degraded
+    (straggler) link.
     """
     assert (hlo_text is None) != (cost is None), "pass hlo_text xor cost"
     if cost is None:
         cost = analyze(hlo_text)
     spec = spec or SystemSpec()
     system = System(spec, parallel=parallel, deadline_s=deadline_s,
-                    scheduler=scheduler, max_workers=max_workers)
+                    scheduler=scheduler, max_workers=max_workers,
+                    fabric=fabric)
     metrics = MetricsHook()
     # Engine-level hook only: it already sees busy intervals + requests,
     # and hooks attached directly to connections would mark them
@@ -110,8 +120,17 @@ def simulate(hlo_text: str = None, cost: HloCost = None,
     if faults:
         plan = {name: [(s_to_ps(t), a, arg) for (t, a, arg) in acts]
                 for name, acts in faults.items()}
+        targets = (system.cores + system.programs
+                   + system.fabric.fault_targets())
+        unknown = set(plan) - {c.name for c in targets}
+        if unknown:
+            raise ValueError(
+                f"fault plan targets unknown components "
+                f"{sorted(unknown)}; chips are chipN.core / chipN.prog, "
+                f"and fabric.* link/DMA targets require fabric='event' "
+                f"(this run uses {system.fabric.name!r})")
         inj = FaultInjector(plan)
-        for comp in system.cores + system.programs:
+        for comp in targets:
             comp.accept_hook(inj)
 
     runops = build_runops(cost, dtype_bits=dtype_bits, repeat_cap=repeat_cap)
@@ -131,7 +150,10 @@ def simulate(hlo_text: str = None, cost: HloCost = None,
         collective_timeouts=result["collective_timeouts"],
         compute_busy_s=busy / 1e12,
         compute_util=(busy / 1e12) / t if t else 0.0,
-        link_report=system.topology.link_report(),
+        link_report=system.fabric.link_report(),
+        fabric=system.fabric.name,
+        link_utilization=system.fabric.link_utilization(
+            s_to_ps(t) if t else None),
         scheduler=system.engine.scheduler.name,
         batch_widths=system.engine.batch_widths,
         window_widths=system.engine.window_widths,

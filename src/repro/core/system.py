@@ -4,8 +4,11 @@ This is the multi-GPU-platform configuration step of the paper (Sec. 4.3)
 transplanted to pods: from a :class:`SystemSpec` we instantiate, per chip,
 a :class:`TensorCore` + :class:`HbmController` + :class:`DeviceProgram`,
 wire them with connections, and add one :class:`CollectiveCoordinator`
-reachable from every device.  Swapping any piece (a different HBM model, a
-3-D torus) is new wiring here -- zero edits to components (DP-2).
+reachable from every device.  The interconnect itself is a pluggable
+``repro.fabric`` backend installed next to the coordinator (``fabric=``,
+default ``SystemSpec.fabric``).  Swapping any piece (a different HBM
+model, a 3-D torus, a third fabric) is new wiring here -- zero edits to
+components (DP-2).
 """
 from __future__ import annotations
 
@@ -18,7 +21,6 @@ from .connection import Connection, Request
 from .engine import Engine
 from .event import Event
 from .hw import SystemSpec, s_to_ps
-from .topology import Topology
 
 
 @dataclasses.dataclass
@@ -90,45 +92,34 @@ class DeviceProgram(Component):
 
 class CollectiveCoordinator(Component):
     """Synchronizes collective ops: waits for every member of a replica
-    group, prices the transfer with the topology's analytic model, then
-    notifies all members.  A straggler delays its whole group -- the
-    paper's cross-device-traffic bottleneck made visible.
+    group, hands the transfer to the fabric backend (over its ``fabric``
+    port), and notifies all members when the fabric reports completion.
+    A straggler delays its whole group -- the paper's
+    cross-device-traffic bottleneck made visible.
+
+    The coordinator is fabric-agnostic: the ``analytic`` backend answers
+    after one closed-form delay, the ``event`` backend after its per-hop
+    transfer events drain (see ``repro.fabric``).
 
     ``deadline_s``: if a group does not fully join within the deadline of
     the first join, members that did join receive ``collective_timeout``
     (failure-detection substrate for the fault-tolerance studies).
     """
 
-    def __init__(self, name: str, topology: Topology,
-                 deadline_s: float = None) -> None:
+    def __init__(self, name: str, deadline_s: float = None) -> None:
         super().__init__(name)
-        self.topology = topology
         self.deadline_ps = s_to_ps(deadline_s) if deadline_s else None
         self.pending: dict = {}       # key -> list[(device, program)]
-        self.meta: dict = {}          # key -> (kind, bytes, group)
         self.completed = 0
         self.timed_out: list = []
 
     def handle(self, event: Event) -> None:
         if event.kind == "request":
-            name, occ, kind, nbytes, group, device, prog = event.payload.payload
-            key = (name, occ, tuple(group))
-            members = self.pending.setdefault(key, [])
-            if not members and self.deadline_ps:
-                self.schedule("deadline", self.deadline_ps, payload=key)
-            members.append((device, prog))
-            self.meta[key] = (kind, nbytes, group)
-            if len(members) == len(group):
-                t = self.topology.collective_time_s(kind, nbytes, [list(group)])
-                self.schedule("complete", s_to_ps(t), payload=key)
-        elif event.kind == "complete":
-            key = event.payload
-            members = self.pending.pop(key, [])
-            self.meta.pop(key, None)
-            self.completed += 1
-            for _, prog in members:
-                self.port("coll").send(Request(
-                    src=self.port("coll"), dst=prog, kind="collective_done"))
+            req = event.payload
+            if req.kind == "join":
+                self._join(req)
+            elif req.kind == "fabric_done":
+                self._complete(req.payload)
         elif event.kind == "deadline":
             key = event.payload
             members = self.pending.get(key)
@@ -138,6 +129,26 @@ class CollectiveCoordinator(Component):
                     self.port("coll").send(Request(
                         src=self.port("coll"), dst=prog,
                         kind="collective_timeout"))
+
+    def _join(self, req: Request) -> None:
+        name, occ, kind, nbytes, group, device, prog = req.payload
+        key = (name, occ, tuple(group))
+        members = self.pending.setdefault(key, [])
+        if not members and self.deadline_ps:
+            self.schedule("deadline", self.deadline_ps, payload=key)
+        members.append((device, prog))
+        if len(members) == len(group):
+            self.port("fabric").send(Request(
+                src=self.port("fabric"), dst=None, kind="start",
+                size_bytes=int(nbytes),
+                payload=(key, kind, nbytes, list(group))))
+
+    def _complete(self, key) -> None:
+        members = self.pending.pop(key, [])
+        self.completed += 1
+        for _, prog in members:
+            self.port("coll").send(Request(
+                src=self.port("coll"), dst=prog, kind="collective_done"))
 
 
 class StarConnection(Connection):
@@ -174,17 +185,19 @@ class System:
 
     def __init__(self, spec: SystemSpec, parallel: bool = False,
                  deadline_s: float = None, scheduler=None,
-                 max_workers: int = 4) -> None:
+                 max_workers: int = 4, fabric=None) -> None:
+        from ..fabric import make_fabric   # late: fabric imports core modules
         self.spec = spec
         self.engine = Engine(parallel=parallel, scheduler=scheduler,
                              max_workers=max_workers)
-        self.topology = Topology(spec)
+        self.fabric = make_fabric(fabric or spec.fabric, spec)
+        self.topology = self.fabric.topology
         self.programs: typing.List[DeviceProgram] = []
         self.cores: typing.List[TensorCore] = []
         self.hbms: typing.List[HbmController] = []
         self.coordinator = self.engine.register(
-            CollectiveCoordinator("coordinator", self.topology,
-                                  deadline_s=deadline_s))
+            CollectiveCoordinator("coordinator", deadline_s=deadline_s))
+        self.fabric.install(self.engine, self.coordinator)
         # The coordinator fabric carries the only cross-chip traffic, so
         # its latency is what the lookahead scheduler's window derives
         # from: per-chip clusters may run ctrl_latency ahead of each other.

@@ -14,10 +14,16 @@ The mesh axes map as: "model" -> x rings (contiguous device ids),
 "data" -> y rings, "pod" -> DCN.
 
 Collective cost models are analytic (ring / hierarchical / bisection
-formulas) so the timeline simulator doesn't need per-packet events; the
-formulas are validated against hand-computed micro-benchmarks in
-``tests/test_sim_topology.py`` and are the Fig. 6-analog "parameter at a
-time" fits.
+formulas), validated against hand-computed micro-benchmarks in
+``tests/test_sim_topology.py`` -- the Fig. 6-analog "parameter at a
+time" fits.  The simulator consumes them through the pluggable
+``repro.fabric`` registry: the ``analytic`` backend prices collectives
+with these formulas directly (O(1) events each), while the ``event``
+backend replays the same decompositions as per-hop transfer events on
+link components and uses this module only for geometry
+(:meth:`Topology.coords` / :meth:`Topology.classify_group`).  These
+formulas remain the parity oracle the event backend is tested against
+(``tests/test_fabric.py``).
 """
 from __future__ import annotations
 
@@ -36,8 +42,10 @@ from .hw import SystemSpec
 # --------------------------------------------------------------------------
 
 _IOTA_RE = re.compile(
-    r"\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
-_LIST_RE = re.compile(r"\{\{([\d,{}\s]+)\}\}")
+    r"replica_groups=\[\s*(\d+)\s*,\s*(\d+)\s*\]"
+    r"<=\[([\d,\s]+)\](?:T\(([\d,\s]+)\))?")
+_LIST_RE = re.compile(r"replica_groups=\{\{([\d,{}\s]+)\}\}")
+_EMPTY_RE = re.compile(r"replica_groups=\{\s*\}")
 
 
 def parse_replica_groups(attr: str) -> typing.List[typing.List[int]]:
@@ -45,6 +53,19 @@ def parse_replica_groups(attr: str) -> typing.List[typing.List[int]]:
 
     Iota form: ``[G,S]<=[d0,d1,...]T(p0,p1,...)`` -- reshape iota(prod d)
     to [d...], transpose by perm, flatten, split into G groups of S.
+
+    Returns ``[]`` when the attribute string carries no replica groups at
+    all: a collective-permute's ``source_target_pairs`` (``hlo.py`` has
+    its own fallback for those), or XLA's ``replica_groups={}``
+    "one flat group" shorthand -- the latter is a known limitation: we
+    cannot recover the device count here, so such a collective carries
+    no groups and is treated as free downstream (the SPMD modules we
+    analyze always emit explicit groups).  Both forms are anchored to
+    ``replica_groups=`` -- an earlier unanchored parse happily consumed
+    ``source_target_pairs`` brace lists, silently defeating the permute
+    fallback in ``hlo.py``.  A present but malformed ``replica_groups=``
+    raises :class:`ValueError` -- a parse that silently dropped groups
+    would misprice every collective downstream.
     """
     m = _IOTA_RE.search(attr)
     if m:
@@ -53,16 +74,27 @@ def parse_replica_groups(attr: str) -> typing.List[typing.List[int]]:
         flat = np.arange(int(np.prod(dims))).reshape(dims)
         if m.group(4):
             perm = [int(p) for p in m.group(4).split(",")]
+            if sorted(perm) != list(range(len(dims))):
+                raise ValueError(
+                    f"replica_groups transpose {perm} is not a permutation "
+                    f"of {len(dims)} iota dims: {attr!r}")
             flat = flat.transpose(perm)
         flat = flat.reshape(-1)
-        assert flat.size == g * s, f"bad iota replica_groups: {attr}"
+        if flat.size != g * s:
+            raise ValueError(
+                f"iota replica_groups promise {g}x{s}={g * s} ids but the "
+                f"iota dims {dims} yield {flat.size}: {attr!r}")
         return [flat[i * s:(i + 1) * s].tolist() for i in range(g)]
     m = _LIST_RE.search(attr)
     if m:
         groups = []
         for grp in re.findall(r"\{([\d,\s]+)\}", m.group(0)):
             groups.append([int(x) for x in grp.split(",") if x.strip()])
+        if not groups:
+            raise ValueError(f"malformed replica_groups list: {attr!r}")
         return groups
+    if "replica_groups" in attr and not _EMPTY_RE.search(attr):
+        raise ValueError(f"malformed replica_groups attribute: {attr!r}")
     return []
 
 

@@ -1,0 +1,45 @@
+"""Pluggable interconnect fabric (see docs/fabric.md).
+
+Mirrors the engine's scheduler registry: ``make_fabric("analytic" |
+"event", spec)`` resolves a :class:`FabricBackend`, and a third backend
+is one :func:`register_fabric` call away.  ``System`` / ``simulate``
+plumb a ``fabric=`` knob through (default ``SystemSpec.fabric``).
+
+* ``analytic`` -- closed-form ring/hierarchical/bisection pricing
+  (O(1) events per collective; no contention between collectives).
+* ``event``    -- per-hop transfer events on link / DMA-engine
+  components; concurrent collectives queue on shared links.
+"""
+from .base import FabricBackend, FabricController
+from .analytic import AnalyticFabric
+from .event import (EventFabric, FabricLink, DmaEngine, DmaStep, Xfer,
+                    decompose)
+
+FABRICS: dict = {}
+
+
+def register_fabric(name: str, factory) -> None:
+    """Make ``make_fabric(name, spec)`` resolve to ``factory(spec)``."""
+    FABRICS[name] = factory
+
+
+def make_fabric(spec_or_name, system_spec) -> FabricBackend:
+    """Resolve a fabric name (or pass through a backend instance)."""
+    if isinstance(spec_or_name, FabricBackend):
+        return spec_or_name
+    try:
+        factory = FABRICS[spec_or_name]
+    except KeyError:
+        raise ValueError(f"unknown fabric {spec_or_name!r}; "
+                         f"available: {sorted(FABRICS)}") from None
+    return factory(system_spec)
+
+
+register_fabric("analytic", AnalyticFabric)
+register_fabric("event", EventFabric)
+
+__all__ = [
+    "FabricBackend", "FabricController", "AnalyticFabric", "EventFabric",
+    "FabricLink", "DmaEngine", "DmaStep", "Xfer", "decompose",
+    "FABRICS", "register_fabric", "make_fabric",
+]

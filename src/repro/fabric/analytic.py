@@ -1,0 +1,43 @@
+"""Analytic fabric backend: closed-form collective pricing.
+
+The fast path and the parity oracle.  Today's ring / hierarchical /
+bisection formulas live in :class:`repro.core.topology.Topology`
+(validated against hand-computed micro-benchmarks in
+``tests/test_sim_topology.py``); this backend prices each collective
+with one formula evaluation and schedules a single completion event --
+O(1) events per collective, no link state, no contention: two
+collectives sharing a link are priced as if each had it to itself.
+When that fidelity gap matters, switch to the ``event`` backend
+(:mod:`repro.fabric.event`).
+"""
+from __future__ import annotations
+
+import typing
+
+from ..core.event import Event
+from ..core.hw import s_to_ps
+from .base import FabricBackend, FabricController
+
+
+class AnalyticController(FabricController):
+    """Prices a collective with the topology formulas and replies after
+    the computed delay.  Also debits the topology's per-link byte
+    counters (the analytic occupancy report)."""
+
+    def begin(self, key, kind: str, nbytes: float,
+              group: typing.List[int]) -> None:
+        t = self.backend.topology.collective_time_s(kind, nbytes, [group])
+        self.schedule("xfer_complete", s_to_ps(t), payload=key)
+
+    def handle(self, event: Event) -> None:
+        if event.kind == "xfer_complete":
+            self.finish(event.payload)
+        else:
+            super().handle(event)
+
+
+class AnalyticFabric(FabricBackend):
+    name = "analytic"
+
+    def make_controller(self) -> FabricController:
+        return AnalyticController("fabric.ctrl", self)

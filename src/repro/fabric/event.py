@@ -1,0 +1,418 @@
+"""Event-driven fabric backend: links and DMA engines as components.
+
+Where the ``analytic`` backend prices a collective with one closed-form
+evaluation, this backend *executes* it on the engine timeline:
+
+* every directed ICI link, every pod DCN uplink and every pod bisection
+  channel is a :class:`FabricLink` component with its own serialization
+  queue (``busy_until_ps``) -- concurrent transfers on a shared link
+  queue behind each other, which is exactly the contention the analytic
+  formulas cannot express;
+* every chip has a :class:`DmaEngine` component that walks the chip's
+  per-hop transfer program (ring steps over the 2-D torus, hierarchical
+  reduce over DCN) hop by hop;
+* the :class:`EventController` decomposes each collective into those
+  per-chip programs (:func:`decompose`) and reports completion when the
+  last DMA engine drains.
+
+The decomposition mirrors the analytic formulas step for step, so on an
+uncongested single collective both backends agree to rounding error
+(asserted in ``tests/test_fabric.py``); they diverge -- the event
+backend slower, i.e. more faithful -- exactly when transfers overlap on
+shared links (multi-tenant traces, concurrent cross-pod groups,
+multi-hop collective-permutes through a common chip).
+
+All fabric traffic rides zero-latency connections, so the lookahead
+scheduler fuses coordinator + controller + DMAs + links into one
+sequential cluster and every scheduler drains the fabric in the same
+(time, rank, seq) order -- bit-identical results by construction.
+
+Fault surface: links and DMA engines are ordinary components, so
+``hooks.FaultInjector`` can degrade a *single link* by name (e.g.
+``{"fabric.pod0.ici[0,1]+x": [(0.0, "slow", 8.0)]}``) -- straggler
+links, not just straggler chips.
+"""
+from __future__ import annotations
+
+import dataclasses
+import typing
+
+from ..core.component import Component
+from ..core.connection import Connection, Request
+from ..core.event import Event
+from ..core.hw import s_to_ps
+from .base import FabricBackend, FabricController
+
+
+# -- per-chip transfer programs ----------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Xfer:
+    """One transfer on one named link (parallel within a DmaStep)."""
+    link: str
+    bytes: int
+
+
+@dataclasses.dataclass(frozen=True)
+class DmaStep:
+    """Parallel transfers + a post-step latency (hop / DCN one-way)."""
+    xfers: tuple                  # tuple[Xfer, ...]; may be empty
+    latency_ps: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class _Xmit:
+    """Routing envelope for xfer / xfer_done requests on the fabric bus."""
+    link: str
+    chip: int
+    key: typing.Any
+
+
+def _dma_name(chip: int) -> str:
+    return f"fabric.chip{chip}.dma"
+
+
+def _ici(topo, device: int, dirn: str) -> str:
+    pod, y, x = topo.coords(device)
+    return f"fabric.pod{pod}.ici[{y},{x}]{dirn}"
+
+
+# -- components ---------------------------------------------------------------
+
+class FabricLink(Component):
+    """A serialized, bandwidth-limited channel (ICI link, DCN uplink or
+    bisection aggregate).  Transfers queue on ``busy_until_ps``; the
+    FaultInjector's ``slow`` action stretches transfer durations (a
+    degraded / straggler link)."""
+
+    def __init__(self, name: str, bandwidth: float) -> None:
+        super().__init__(name)
+        self.bandwidth = bandwidth
+        self.busy_until_ps = 0
+        self.bytes_total = 0
+        self.busy_ps = 0
+
+    def handle(self, event: Event) -> None:
+        if event.kind == "request":            # an xfer from a DMA engine
+            req: Request = event.payload
+            start = max(self.engine.now, self.busy_until_ps)
+            dur = s_to_ps(req.size_bytes / self.bandwidth
+                          * self.fault_slow_factor)
+            end = start + dur
+            self.busy_until_ps = end
+            self.bytes_total += req.size_bytes
+            self.busy_ps += dur
+            self.mark_busy(start, end, "xfer")
+            self.schedule("xmit_done", end - self.engine.now,
+                          payload=req.payload)
+        elif event.kind == "xmit_done":
+            self.port("bus").send(Request(
+                src=self.port("bus"), dst=None, kind="xfer_done",
+                payload=event.payload))
+
+
+class DmaEngine(Component):
+    """Walks per-collective hop programs for one chip: issue a step's
+    transfers, wait for all of them, apply the step latency, advance.
+    Multiple collectives (different keys) may be in flight at once --
+    their transfers contend on the links, not here."""
+
+    def __init__(self, name: str, chip: int) -> None:
+        super().__init__(name)
+        self.chip = chip
+        self._progs: dict = {}     # key -> [steps, idx]
+        self._left: dict = {}      # key -> outstanding xfers this step
+
+    def handle(self, event: Event) -> None:
+        if event.kind == "request":
+            req: Request = event.payload
+            if req.kind == "exec":
+                _, key, steps = req.payload
+                self._progs[key] = [steps, 0]
+                self._start_step(key)
+            elif req.kind == "xfer_done":
+                key = req.payload.key
+                self._left[key] -= 1
+                if self._left[key] == 0:
+                    steps, idx = self._progs[key]
+                    self.schedule("step_done", self._lat(steps[idx]),
+                                  payload=key)
+        elif event.kind == "step_done":
+            prog = self._progs[key := event.payload]
+            prog[1] += 1
+            if prog[1] < len(prog[0]):
+                self._start_step(key)
+            else:
+                del self._progs[key]
+                self._left.pop(key, None)
+                self.port("bus").send(Request(
+                    src=self.port("bus"), dst=None, kind="dma_done",
+                    payload=(self.chip, key)))
+
+    def _lat(self, step: DmaStep) -> int:
+        """Step turnaround; a FaultInjector 'slow' on this DMA engine
+        stretches it (a straggling DMA issues hops more slowly)."""
+        return int(round(step.latency_ps * self.fault_slow_factor))
+
+    def _start_step(self, key) -> None:
+        steps, idx = self._progs[key]
+        step: DmaStep = steps[idx]
+        if not step.xfers:
+            self.schedule("step_done", self._lat(step), payload=key)
+            return
+        self._left[key] = len(step.xfers)
+        for x in step.xfers:
+            self.port("bus").send(Request(
+                src=self.port("bus"), dst=None, kind="xfer",
+                size_bytes=int(x.bytes),
+                payload=_Xmit(x.link, self.chip, key)))
+
+
+class FabricXbar(Connection):
+    """Routing bus for all fabric traffic.  Routing lives in the
+    connection (DP-3): components address links / DMA engines / the
+    controller by *name* in the request payload, never by reference."""
+
+    def __init__(self, name: str, controller) -> None:
+        super().__init__(name)
+        self.controller = controller
+        self.registry: dict = {}
+
+    def attach(self, component, port_name: str = "bus") -> None:
+        self.plug(component.port(port_name))
+        self.registry[component.name] = component
+
+    def _resolve_dst(self, src_port, request: Request) -> None:
+        if request.dst is not None:
+            return
+        if request.kind == "xfer":
+            request.dst = self.registry[request.payload.link]
+        elif request.kind == "xfer_done":
+            request.dst = self.registry[_dma_name(request.payload.chip)]
+        elif request.kind == "exec":
+            request.dst = self.registry[_dma_name(request.payload[0])]
+        elif request.kind == "dma_done":
+            request.dst = self.controller
+
+
+class EventController(FabricController):
+    """Decomposes collectives into per-chip DMA programs and completes a
+    key when every participating DMA engine reports done."""
+
+    def __init__(self, name: str, backend: "EventFabric") -> None:
+        super().__init__(name, backend)
+        self._pending: dict = {}   # key -> DMAs still running
+
+    def begin(self, key, kind: str, nbytes: float,
+              group: typing.List[int]) -> None:
+        progs = decompose(self.backend.topology, kind, float(nbytes), group)
+        progs = {d: steps for d, steps in progs.items() if steps}
+        if not progs:
+            self.schedule("noop_done", 0, payload=key)
+            return
+        self._pending[key] = len(progs)
+        for chip in sorted(progs):
+            self.port("bus").send(Request(
+                src=self.port("bus"), dst=None, kind="exec",
+                payload=(chip, key, tuple(progs[chip]))))
+
+    def handle(self, event: Event) -> None:
+        if event.kind == "request" and event.payload.kind == "dma_done":
+            _, key = event.payload.payload
+            self._pending[key] -= 1
+            if self._pending[key] == 0:
+                del self._pending[key]
+                self.finish(key)
+        elif event.kind == "noop_done":
+            self.finish(event.payload)
+        else:
+            super().handle(event)
+
+
+# -- collective decomposition (mirrors topology.py's analytic formulas) ------
+
+def _ring_steps(topo, members, axis: str, B: float, phases: int,
+                ring_n: int = None) -> dict:
+    """Bidirectional ring: each step moves B/(2n) per direction per chip.
+    ``phases*(n-1)`` steps of ``chunk/bw + hop`` reproduce ``_ring_time``."""
+    n = ring_n or len(members)
+    hop = s_to_ps(topo.spec.chip.ici_hop_latency_s)
+    chunk = int(round(B / (2 * n)))
+    nsteps = phases * (n - 1)
+    out = {}
+    for d in members:
+        plus, minus = _ici(topo, d, "+" + axis), _ici(topo, d, "-" + axis)
+        out[d] = [DmaStep((Xfer(plus, chunk), Xfer(minus, chunk)), hop)
+                  for _ in range(nsteps)]
+    return out
+
+
+def _block_steps(topo, members, m: int, B: float, phases: int) -> dict:
+    """Hierarchical 2-D: x-ring phase with B, then y-ring with B/nx --
+    the event-space image of ``_block2d_time``."""
+    nx = min(topo.X, m)
+    ny = max(1, m // nx)
+    out = _ring_steps(topo, members, "x", B, phases, ring_n=nx)
+    if ny > 1:
+        for d, steps in _ring_steps(topo, members, "y", B / nx, phases,
+                                    ring_n=ny).items():
+            out[d] = out[d] + steps
+    return out
+
+
+def _merge(progs: dict, extra: dict) -> None:
+    for d, steps in extra.items():
+        progs[d] = progs.get(d, []) + steps
+
+
+def _torus_path(topo, src: int, dst: int) -> typing.List[str]:
+    """Directed link names along the x-then-y torus-shortest route."""
+    pod, y, x = topo.coords(src)
+    _, y2, x2 = topo.coords(dst)
+    X, Y = topo.X, topo.Y
+    links = []
+    dx = (x2 - x) % X
+    sx, nx = ("+x", dx) if dx <= X - dx else ("-x", X - dx)
+    for _ in range(nx):
+        links.append(f"fabric.pod{pod}.ici[{y},{x}]{sx}")
+        x = (x + (1 if sx == "+x" else -1)) % X
+    dy = (y2 - y) % Y
+    sy, ny = ("+y", dy) if dy <= Y - dy else ("-y", Y - dy)
+    for _ in range(ny):
+        links.append(f"fabric.pod{pod}.ici[{y},{x}]{sy}")
+        y = (y + (1 if sy == "+y" else -1)) % Y
+    return links
+
+
+def _cross_pod_steps(topo, kind: str, B: float, group) -> dict:
+    """Hierarchical intra-pod + DCN exchange; mirrors ``_cross_pod_time``
+    (with its n_groups=1 per-coordinator-call specialization).  The DCN
+    transfer and any closing broadcast phase run on each pod's
+    representative chip, so concurrent cross-pod groups queue on the
+    shared :class:`FabricLink` DCN uplink -- the contention the analytic
+    formula only models *within* one call's group list."""
+    spec = topo.spec
+    pods = spec.num_pods
+    n = len(group)
+    per_pod = max(1, n // pods)
+    if kind == "all-reduce":
+        eff = 2 * (pods - 1) / pods
+    else:                          # ag / rs / a2a / permute, as analytic
+        eff = (pods - 1) / pods
+    by_pod: dict = {}
+    for d in group:
+        by_pod.setdefault(topo.coords(d)[0], []).append(d)
+    progs = {d: [] for d in group}
+    Bx = B
+    if per_pod > 1:
+        _merge(progs, _block_steps(topo, group, per_pod, B, 1))
+        Bx = B / per_pod
+    dcn_lat = s_to_ps(spec.chip.dcn_latency_s)
+    dcn_bytes = int(round(Bx * eff))
+    reps = []
+    for pod in sorted(by_pod):
+        rep = min(by_pod[pod])
+        reps.append(rep)
+        progs[rep] = progs[rep] + [DmaStep(
+            (Xfer(f"fabric.pod{pod}.dcn", dcn_bytes),), dcn_lat)]
+    if per_pod > 1 and kind in ("all-reduce", "all-gather"):
+        _merge(progs, _block_steps(topo, reps, per_pod, B, 1))
+    return progs
+
+
+def decompose(topo, kind: str, B: float, group: typing.List[int]) -> dict:
+    """Per-chip DMA programs for one collective over one replica group."""
+    n = len(group)
+    if n <= 1:
+        return {}
+    cls = topo.classify_group(group)
+    spec = topo.spec
+    c = spec.chip
+    if cls == "cross_pod":
+        return _cross_pod_steps(topo, kind, B, group)
+    axis = "x" if cls == "ring_x" else "y"
+    if kind == "all-reduce":
+        return (_ring_steps(topo, group, axis, B, 2) if cls.startswith("ring")
+                else _block_steps(topo, group, n, B, 2))
+    if kind in ("all-gather", "reduce-scatter"):
+        return (_ring_steps(topo, group, axis, B, 1) if cls.startswith("ring")
+                else _block_steps(topo, group, n, B, 1))
+    if kind == "all-to-all":
+        if cls.startswith("ring"):
+            load = int(round(B * (n - 1) / 8))
+            post = s_to_ps(n / 2 * c.ici_hop_latency_s)
+            return {d: [DmaStep((Xfer(_ici(topo, d, "+" + axis), load),
+                                 Xfer(_ici(topo, d, "-" + axis), load)),
+                                post)]
+                    for d in group}
+        post = s_to_ps((topo.X / 2 + topo.Y / 2) * c.ici_hop_latency_s)
+        return {d: [DmaStep(
+            (Xfer(f"fabric.pod{topo.coords(d)[0]}.bisect",
+                  int(round(B / 2))),), post)] for d in group}
+    if kind == "collective-permute":
+        hop = s_to_ps(c.ici_hop_latency_s)
+        progs = {d: [] for d in group}
+        for i, src in enumerate(group):
+            dst = group[(i + 1) % n]
+            progs[src] = [DmaStep((Xfer(link, int(round(B))),), hop)
+                          for link in _torus_path(topo, src, dst)]
+        return progs
+    raise ValueError(f"unknown collective kind {kind!r}")
+
+
+# -- the backend --------------------------------------------------------------
+
+class EventFabric(FabricBackend):
+    name = "event"
+
+    def __init__(self, spec) -> None:
+        super().__init__(spec)
+        self.links: typing.List[FabricLink] = []
+        self.dcn: typing.List[FabricLink] = []
+        self.dmas: typing.List[DmaEngine] = []
+
+    def make_controller(self) -> FabricController:
+        return EventController("fabric.ctrl", self)
+
+    def _install_extra(self, engine) -> None:
+        spec = self.spec
+        topo = self.topology
+        xbar = engine.register(FabricXbar("fabric.xbar", self.controller))
+        xbar.attach(self.controller)
+        for d in range(spec.total_chips):
+            self.dmas.append(engine.register(DmaEngine(_dma_name(d), d)))
+            xbar.attach(self.dmas[-1])
+            for dirn in ("+x", "-x", "+y", "-y"):
+                link = FabricLink(_ici(topo, d, dirn),
+                                  spec.chip.ici_link_bandwidth)
+                self.links.append(engine.register(link))
+                xbar.attach(link)
+        for p in range(spec.num_pods):
+            up = FabricLink(f"fabric.pod{p}.dcn", spec.dcn_bandwidth_per_pod)
+            bis = FabricLink(f"fabric.pod{p}.bisect",
+                             spec.bisection_bandwidth_per_pod)
+            self.dcn.append(engine.register(up))
+            self.links.append(engine.register(bis))
+            xbar.attach(up)
+            xbar.attach(bis)
+
+    # -- fault / reporting surface ---------------------------------------
+    def fault_targets(self):
+        return self.links + self.dcn + self.dmas
+
+    def link_report(self) -> dict:
+        hot = sorted(self.links, key=lambda l: (-l.bytes_total, l.name))[:8]
+        return {
+            "hottest_links": [(l.name, float(l.bytes_total))
+                              for l in hot if l.bytes_total],
+            "dcn_bytes": [(l.name, float(l.bytes_total)) for l in self.dcn],
+        }
+
+    def link_utilization(self, end_ps: int = None) -> dict:
+        if not end_ps:
+            end_ps = max((l.busy_until_ps for l in self.links + self.dcn),
+                         default=0)
+        if not end_ps:
+            return {}
+        return {l.name: l.busy_ps / end_ps
+                for l in self.links + self.dcn if l.busy_ps}

@@ -1,0 +1,232 @@
+"""Pluggable fabric tests: registry, analytic/event parity on uncongested
+micro-benchmarks, congestion the analytic backend cannot express,
+scheduler bit-identity on event-fabric runs, and straggler links."""
+import pytest
+
+from repro.core import SystemSpec, System, simulate
+from repro.core.hlo import CollectiveRecord, HloCost, TraceOp
+from repro.core.system import _RunOp
+from repro.fabric import (FABRICS, AnalyticFabric, EventFabric, make_fabric,
+                          register_fabric)
+
+SPEC = SystemSpec(pod_shape=(4, 4), num_pods=2)
+
+
+def _coll_cost(kind, nbytes, group):
+    rec = CollectiveRecord(kind, "c", nbytes, int(nbytes), int(nbytes),
+                           [group])
+    return HloCost(collectives=[rec],
+                   trace=[TraceOp("collective", "c", collective=rec)])
+
+
+def _sim(kind, nbytes, group, fabric, **kw):
+    return simulate(cost=_coll_cost(kind, nbytes, group), spec=SPEC,
+                    device_limit=None, fabric=fabric, **kw)
+
+
+# -- registry ----------------------------------------------------------------
+
+def test_registry_has_both_backends():
+    assert "analytic" in FABRICS and "event" in FABRICS
+    assert isinstance(make_fabric("analytic", SPEC), AnalyticFabric)
+    assert isinstance(make_fabric("event", SPEC), EventFabric)
+
+
+def test_unknown_fabric_raises():
+    with pytest.raises(ValueError, match="unknown fabric"):
+        make_fabric("quantum", SPEC)
+
+
+def test_backend_instance_passes_through():
+    back = EventFabric(SPEC)
+    assert make_fabric(back, SPEC) is back
+
+
+def test_backend_instance_is_single_use():
+    """Reusing one backend across Systems would mix dead components and
+    stale byte counters into later reports -- install() refuses."""
+    back = EventFabric(SPEC)
+    System(SPEC, fabric=back)
+    with pytest.raises(RuntimeError, match="single-use"):
+        System(SPEC, fabric=back)
+
+
+def test_fault_plan_unknown_target_raises():
+    """A fabric-link fault under the analytic backend (or any typo) must
+    not silently no-op."""
+    with pytest.raises(ValueError, match="unknown components"):
+        _sim("all-reduce", 1e7, [0, 1, 2, 3], "analytic",
+             faults={"fabric.pod0.ici[0,1]+x": [(0.0, "slow", 8.0)]})
+    with pytest.raises(ValueError, match="unknown components"):
+        _sim("all-reduce", 1e7, [0, 1, 2, 3], "event",
+             faults={"chip999.core": [(0.0, "slow", 8.0)]})
+
+
+def test_register_third_backend():
+    class MyFabric(AnalyticFabric):
+        name = "mine"
+    register_fabric("mine", MyFabric)
+    try:
+        assert make_fabric("mine", SPEC).name == "mine"
+    finally:
+        del FABRICS["mine"]
+
+
+def test_spec_fabric_default_is_threaded():
+    spec = SystemSpec(pod_shape=(2, 2), fabric="event")
+    rec = CollectiveRecord("all-reduce", "c", 1e5, int(1e5), int(1e5),
+                           [[0, 1]])
+    cost = HloCost(collectives=[rec],
+                   trace=[TraceOp("collective", "c", collective=rec)])
+    rep = simulate(cost=cost, spec=spec, device_limit=None)
+    assert rep.fabric == "event"
+    assert simulate(cost=cost, spec=SystemSpec(pod_shape=(2, 2)),
+                    device_limit=None).fabric == "analytic"
+
+
+# -- uncongested parity (the event backend must reproduce the oracle) --------
+
+PARITY_CASES = [
+    ("all-reduce", 1e7, [0, 1, 2, 3]),            # ring_x
+    ("all-gather", 1e7, [0, 1, 2, 3]),
+    ("reduce-scatter", 1e7, [0, 4, 8, 12]),       # ring_y
+    ("all-reduce", 1e7, list(range(16))),         # block_2d hierarchical
+    ("all-to-all", 1e6, [0, 1, 2, 3]),            # ring uniform a2a
+    ("all-to-all", 1e6, list(range(16))),         # bisection-limited a2a
+    ("collective-permute", 5e5, [0, 1]),          # adjacent hop
+    ("all-reduce", 1e7, [0, 16]),                 # pod-axis pair over DCN
+    ("all-reduce", 1e7, list(range(32))),         # hierarchical + DCN
+]
+
+
+@pytest.mark.parametrize("kind,nbytes,group", PARITY_CASES)
+def test_event_matches_analytic_uncongested(kind, nbytes, group):
+    """Single collective, idle fabric: per-hop replay must agree with the
+    closed form within 5% (in practice: to s_to_ps rounding)."""
+    a = _sim(kind, nbytes, group, "analytic")
+    e = _sim(kind, nbytes, group, "event")
+    assert a.time_s > 0
+    assert e.time_s == pytest.approx(a.time_s, rel=0.05)
+
+
+def test_event_reports_fabric_and_utilization():
+    rep = _sim("all-reduce", 1e7, [0, 1, 2, 3], "event")
+    assert rep.fabric == "event"
+    assert rep.link_utilization, "event backend must report link occupancy"
+    assert all(0.0 < u <= 1.0 for u in rep.link_utilization.values())
+    assert rep.link_report["hottest_links"]
+    assert _sim("all-reduce", 1e7, [0, 1, 2, 3],
+                "analytic").link_utilization == {}
+
+
+# -- congestion the analytic formulas cannot express -------------------------
+
+def _two_tenant_time(fabric, op_a, devs_a, op_b, devs_b):
+    sys_ = System(SPEC, fabric=fabric)
+    sys_.load_trace([op_a], devs_a)
+    sys_.load_trace([op_b], devs_b)
+    return sys_.run()["time_s"]
+
+
+def test_concurrent_crosspod_groups_contend_on_dcn():
+    """Two pod-axis all-reduces run concurrently by disjoint tenants:
+    the analytic backend prices each as if it owned the pod's DCN uplink;
+    the event backend queues the second transfer behind the first."""
+    op_a = _RunOp(kind="collective", name="arA", coll_kind="all-reduce",
+                  bytes=1e7, group=((0, 16),))
+    op_b = _RunOp(kind="collective", name="arB", coll_kind="all-reduce",
+                  bytes=1e7, group=((1, 17),))
+    t_a = _two_tenant_time("analytic", op_a, [0, 16], op_b, [1, 17])
+    t_e = _two_tenant_time("event", op_a, [0, 16], op_b, [1, 17])
+    solo = _sim("all-reduce", 1e7, [0, 16], "event").time_s
+    assert t_a == pytest.approx(solo, rel=0.01)   # analytic: no interference
+    assert t_e > t_a * 1.25                       # event: queueing visible
+    # the extra time is one serialized 10MB DCN transfer
+    assert t_e - t_a == pytest.approx(1e7 / SPEC.dcn_bandwidth_per_pod,
+                                      rel=0.05)
+
+
+def test_concurrent_block_alltoalls_contend_on_bisection():
+    op_a = _RunOp(kind="collective", name="a2aA", coll_kind="all-to-all",
+                  bytes=4e6, group=(tuple(range(8)),))
+    op_b = _RunOp(kind="collective", name="a2aB", coll_kind="all-to-all",
+                  bytes=4e6, group=(tuple(range(8, 16)),))
+    t_a = _two_tenant_time("analytic", op_a, list(range(8)),
+                           op_b, list(range(8, 16)))
+    t_e = _two_tenant_time("event", op_a, list(range(8)),
+                           op_b, list(range(8, 16)))
+    assert t_e > t_a * 1.5                        # shared pod bisection
+
+
+def test_disjoint_rings_do_not_contend():
+    """Sanity: collectives on disjoint links must NOT slow each other --
+    contention is per-link state, not a global penalty."""
+    op_a = _RunOp(kind="collective", name="arA", coll_kind="all-reduce",
+                  bytes=1e7, group=((0, 1, 2, 3),))
+    op_b = _RunOp(kind="collective", name="arB", coll_kind="all-reduce",
+                  bytes=1e7, group=((4, 5, 6, 7),))
+    t_e = _two_tenant_time("event", op_a, [0, 1, 2, 3], op_b, [4, 5, 6, 7])
+    solo = _sim("all-reduce", 1e7, [0, 1, 2, 3], "event").time_s
+    assert t_e == pytest.approx(solo, rel=0.01)
+
+
+# -- scheduler bit-identity on event-fabric runs -----------------------------
+
+def _mixed_cost(layers=3):
+    cost = HloCost()
+    groups = [list(range(8))]
+    for i in range(layers):
+        cost.trace.append(TraceOp("compute", f"seg{i}", flops=1e9,
+                                  hbm_bytes=1e6))
+        rec = CollectiveRecord("all-reduce", f"ar{i}", 1e6, int(1e6),
+                               int(1e6), groups)
+        cost.collectives.append(rec)
+        cost.trace.append(TraceOp("collective", f"ar{i}", collective=rec))
+    return cost
+
+
+@pytest.mark.parametrize("scheduler", ["batch", "lookahead"])
+def test_event_fabric_bit_identical_across_schedulers(scheduler):
+    cost = _mixed_cost()
+    oracle = simulate(cost=cost, spec=SPEC, device_limit=None,
+                      fabric="event", scheduler="serial")
+    rep = simulate(cost=cost, spec=SPEC, device_limit=None,
+                   fabric="event", scheduler=scheduler)
+    assert rep.summary() == oracle.summary()
+    assert rep.link_utilization == oracle.link_utilization
+    assert rep.events == oracle.events
+
+
+# -- straggler links (FaultInjector on fabric components) --------------------
+
+def test_straggler_link_slows_collective():
+    base = _sim("all-reduce", 1e7, [0, 1, 2, 3], "event")
+    slow = _sim("all-reduce", 1e7, [0, 1, 2, 3], "event",
+                faults={"fabric.pod0.ici[0,1]+x": [(0.0, "slow", 8.0)]})
+    assert slow.time_s > base.time_s * 1.5
+    assert slow.devices_done == 4                 # degraded, not dead
+
+
+def test_straggler_link_off_path_is_free():
+    base = _sim("all-reduce", 1e7, [0, 1, 2, 3], "event")
+    off = _sim("all-reduce", 1e7, [0, 1, 2, 3], "event",
+               faults={"fabric.pod0.ici[3,3]+y": [(0.0, "slow", 8.0)]})
+    assert off.time_s == pytest.approx(base.time_s, rel=1e-9)
+
+
+def test_straggler_dma_engine_slows_collective():
+    """A slow DMA engine issues hops more slowly; its chain stretches and
+    the whole group waits (straggler DMA, distinct from straggler link)."""
+    base = _sim("all-reduce", 1e7, [0, 1, 2, 3], "event")
+    slow = _sim("all-reduce", 1e7, [0, 1, 2, 3], "event",
+                faults={"fabric.chip1.dma": [(0.0, "slow", 50.0)]})
+    assert slow.time_s > base.time_s * 1.5
+    assert slow.devices_done == 4
+
+
+def test_straggler_link_recovers():
+    base = _sim("all-reduce", 1e7, [0, 1, 2, 3], "event")
+    rec = _sim("all-reduce", 1e7, [0, 1, 2, 3], "event",
+               faults={"fabric.pod0.ici[0,1]+x": [
+                   (0.0, "slow", 8.0), (base.time_s, "recover", None)]})
+    assert base.time_s < rec.time_s

@@ -127,6 +127,78 @@ def test_limited_connection_backpressure_no_busy_ticking():
     assert prod.notified == prod.rejected   # one wake per rejection, no polls
 
 
+class BurstSender(Component):
+    """Sends tagged messages back-to-back to `sink` (DP-6: waits on
+    rejection, retries only on notify_available)."""
+
+    def __init__(self, name, tags, sink):
+        super().__init__(name)
+        self.tags = list(tags)
+        self.sink = sink
+
+    def _try_send(self):
+        while self.tags:
+            req = Request(src=self.port("out"), dst=self.sink, kind="data",
+                          size_bytes=64, payload=self.tags[0])
+            if not self.port("out").send(req):
+                return
+            self.tags.pop(0)
+
+    def handle(self, event):
+        self._try_send()
+
+    def notify_available(self, connection):
+        self._try_send()
+
+
+class TaggedSink(Component):
+    def __init__(self, name):
+        super().__init__(name)
+        self.order = []
+
+    def handle(self, event):
+        if event.kind == "request":
+            self.order.append(event.payload.payload)
+
+
+def test_limited_connection_wake_slot_not_stolen():
+    """The posted-event wake reserves the freed slot for the woken FIFO
+    waiter: a same-timestamp sender arriving between the wake and its
+    delivery must be rejected, not steal the slot (starvation regression
+    from converting the synchronous wake into an event)."""
+    eng = Engine()
+    sink = eng.register(TaggedSink("sink"))
+    a = eng.register(BurstSender("a", ["a1", "a2"], sink))
+    b = eng.register(BurstSender("b", ["b1"], sink))
+    conn = eng.register(LimitedConnection("lim", bandwidth=0.0,
+                                          latency_s=1e-6, capacity=1))
+    conn.plug(a.port("out")).plug(b.port("out")).plug(sink.port("in"))
+    a.schedule("go", 0)                        # a1 accepted, a2 queued
+    b.schedule("go", s_to_ps(1e-6))            # collides with a1's deliver
+    eng.run()
+    assert sink.order == ["a1", "a2", "b1"]    # FIFO preserved, no steal
+
+
+def test_failed_waiter_releases_promised_slot():
+    """A waiter that dies while holding a wake reservation must not
+    strand the freed slot: the engine hands the reservation back and the
+    next FIFO waiter is woken instead."""
+    from repro.core import FaultInjector
+    eng = Engine()
+    sink = eng.register(TaggedSink("sink"))
+    a = eng.register(BurstSender("a", ["a1", "a2"], sink))
+    b = eng.register(BurstSender("b", ["b1"], sink))
+    conn = eng.register(LimitedConnection("lim", bandwidth=0.0,
+                                          latency_s=1e-6, capacity=1))
+    conn.plug(a.port("out")).plug(b.port("out")).plug(sink.port("in"))
+    a.schedule("go", 0)          # a1 in flight; a2 rejected -> waiting
+    b.schedule("go", 1)          # b1 rejected -> waiting behind a
+    a.accept_hook(FaultInjector({"a": [(2, "fail", None)]}))
+    eng.run()                    # a's wake is dropped; slot passes to b
+    assert sink.order == ["a1", "b1"]
+    assert conn._promised == [] and conn._waiting == []
+
+
 def test_link_serialization_time():
     """Transfer completes at bytes/bw + latency; serialized back-to-back."""
     eng = Engine()

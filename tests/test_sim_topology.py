@@ -19,6 +19,44 @@ def test_parse_list_form():
     assert groups == [[0, 1], [2, 3]]
 
 
+def test_parse_iota_transposed_with_whitespace():
+    """XLA pretty-printers may space the dims; the parse must not care."""
+    groups = parse_replica_groups("replica_groups=[4, 2]<=[2, 4]T(1, 0)")
+    assert groups == [[0, 4], [1, 5], [2, 6], [3, 7]]
+
+
+def test_parse_iota_3d_transpose():
+    groups = parse_replica_groups("replica_groups=[2,4]<=[2,2,2]T(2,0,1)")
+    flat = [0, 2, 4, 6, 1, 3, 5, 7]
+    assert groups == [flat[:4], flat[4:]]
+
+
+def test_parse_empty_braces_means_no_groups():
+    """XLA's `replica_groups={}` shorthand (one flat group) parses to []
+    so callers fall back to their own default grouping."""
+    assert parse_replica_groups("replica_groups={}") == []
+
+
+def test_parse_no_replica_groups_attr_is_empty():
+    """collective-permute attrs carry source_target_pairs instead."""
+    assert parse_replica_groups("source_target_pairs={{0,1},{1,2}}") == []
+
+
+def test_parse_malformed_raises_not_falls_through():
+    with pytest.raises(ValueError, match="malformed replica_groups"):
+        parse_replica_groups("replica_groups=oops")
+
+
+def test_parse_iota_size_mismatch_raises():
+    with pytest.raises(ValueError, match="yield"):
+        parse_replica_groups("replica_groups=[2,4]<=[3]")
+
+
+def test_parse_iota_bad_transpose_perm_raises():
+    with pytest.raises(ValueError, match="not a permutation"):
+        parse_replica_groups("replica_groups=[4,2]<=[2,4]T(1,1)")
+
+
 SPEC = SystemSpec(pod_shape=(4, 4), num_pods=2)
 
 

@@ -15,12 +15,27 @@ Prints name,analytic_us,event_us,event/analytic CSV and exits non-zero
 unless the overlapped scenarios show a >=1.25x congestion effect while
 the control stays within 2%: the separation between backends is the
 deliverable, not a point estimate.
+
+A second section measures how well the lookahead scheduler parallelizes
+event-fabric *replay* now that fabric legs carry latency (each chip's
+DMA + links is its own cluster): a multi-tenant, event-dense trace runs
+under serial/batch/lookahead (bit-identity asserted) and the results —
+wall clock plus the paper-style *architectural* speedup (critical-path
+events at N workers vs total events; under CPython's GIL threads add no
+physical parallelism, so the architectural number is the Fig. 8-analog
+deliverable, exactly as the paper reports core-count speedup for its Go
+runtime) — merge into ``BENCH_fabric.json`` under ``"replay"``.  Exits
+non-zero unless the architectural lookahead-over-serial speedup at 4
+workers is >= 1.5x with all schedulers bit-identical.
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
+import time
 
-from repro.core import SystemSpec, System
+from repro.core import LookaheadScheduler, SystemSpec, System
 from repro.core.system import _RunOp
 
 SPEC = SystemSpec(pod_shape=(4, 4), num_pods=2)
@@ -57,6 +72,91 @@ def scenarios():
     }
 
 
+# -- event-fabric replay parallelism (lookahead vs serial) -------------------
+
+def _tenant_ops(tid: int, rounds: int) -> tuple:
+    """One tenant: an 8-chip block replaying `rounds` x (compute segment
+    + ring all-reduce + all-gather).  Per-tenant flop/byte scaling
+    staggers the tenants' timestamps, so same-timestamp batching finds
+    little parallelism and the lookahead window has to earn it."""
+    devs = tuple(range(8 * tid, 8 * tid + 8))
+    ops = []
+    for r in range(rounds):
+        ops.append(_RunOp(kind="compute", name=f"seg{tid}_{r}",
+                          flops=2e9 * (1.0 + 0.37 * tid), hbm_bytes=1e6))
+        ops.append(_coll(f"ar{tid}_{r}", "all-reduce",
+                         1e6 * (1.0 + 0.23 * tid), devs))
+        ops.append(_coll(f"ag{tid}_{r}", "all-gather",
+                         5e5 * (1.0 + 0.31 * tid), devs))
+    return ops, list(devs)
+
+
+def _replay_run(scheduler, workers: int = 4, record: bool = False,
+                tenants: int = 4, rounds: int = 6):
+    sched = scheduler
+    if record:
+        sched = LookaheadScheduler(max_workers=workers)
+        sched.record_group_sizes = True
+    system = System(SPEC, fabric="event", scheduler=sched,
+                    max_workers=workers)
+    for tid in range(tenants):
+        ops, devs = _tenant_ops(tid, rounds)
+        system.load_trace(ops, devs)
+    t0 = time.time()
+    res = system.run()
+    wall = time.time() - t0
+    state = (res, system.fabric.link_utilization(), system.fabric.link_report())
+    return state, system.engine, wall
+
+
+def _architectural_speedup(round_groups, workers: int) -> float:
+    """Critical-path events at `workers` cores vs total events, using the
+    pool's actual round-robin chunking of sorted cluster groups."""
+    total = critical = 0
+    for sizes in round_groups:
+        total += sum(sizes)
+        n = min(workers, len(sizes))
+        critical += max(sum(sizes[i::n]) for i in range(n))
+    return total / max(1, critical)
+
+
+def replay_speedup(workers: int = 4) -> dict:
+    oracle, eng_s, wall_s = _replay_run("serial", workers=1)
+    rows = {"events": eng_s.events_processed, "workers": workers,
+            "wall_serial_s": round(wall_s, 4)}
+    identical = True
+    for sched in ("batch", "lookahead"):
+        state, eng, wall = _replay_run(sched, workers=workers)
+        identical &= state == oracle
+        rows[f"wall_{sched}{workers}_s"] = round(wall, 4)
+        rows[f"rounds_{sched}"] = len(eng.window_widths
+                                      or eng.batch_widths)
+    state, eng, _ = _replay_run("lookahead", workers=workers, record=True)
+    identical &= state == oracle
+    rows["bit_identical"] = identical
+    rows["clusters_busy_max"] = max(
+        (len(g) for g in eng.round_group_sizes), default=0)
+    rows["speedup_lookahead_vs_serial_4w"] = round(
+        _architectural_speedup(eng.round_group_sizes, workers), 2)
+    return rows
+
+
+def merge_bench(update: dict) -> str:
+    """Read-merge-write BENCH_fabric.json: this benchmark owns the
+    "replay" section, engine_scalability owns "runs" -- neither may
+    clobber the other (both import this one helper)."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(root, "BENCH_fabric.json")
+    data = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            data = json.load(f)
+    data.update(update)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+    return path
+
+
 def main() -> int:
     print("name,analytic_us,event_us,ratio")
     ratios = {}
@@ -68,6 +168,14 @@ def main() -> int:
     ok = (ratios["dcn_overlap"] >= 1.25 and ratios["bisect_overlap"] >= 1.25
           and abs(ratios["ring_disjoint"] - 1.0) < 0.02)
     print(f"# congestion visible to event backend only: {ok}")
+
+    replay = replay_speedup()
+    path = merge_bench({"replay": replay})
+    speedup = replay["speedup_lookahead_vs_serial_4w"]
+    print(f"# replay: {replay['events']} events, lookahead architectural "
+          f"speedup over serial at 4 workers: {speedup:.2f}x "
+          f"(bit_identical={replay['bit_identical']}); wrote {path}")
+    ok = ok and replay["bit_identical"] and speedup >= 1.5
     return 0 if ok else 1
 
 

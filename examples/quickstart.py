@@ -8,6 +8,8 @@
 4. dry-run style analysis: lower the step, parse the machine-level HLO,
    replay it on the MGSim-TPU system model and print the roofline.
 """
+import tempfile
+
 import jax
 from repro.compat import cost_analysis_dict
 import numpy as np
@@ -29,13 +31,16 @@ def main():
 
     # ---- 2. train -------------------------------------------------------
     print(f"== training {ARCH} ==")
-    report = run(cfg, mesh,
-                 DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
-                            global_batch=4),
-                 opt_cfg=OptConfig(lr=1e-3, total_steps=20, warmup_steps=2),
-                 loop_cfg=LoopConfig(total_steps=20, ckpt_every=10,
-                                     ckpt_dir="/tmp/quickstart_ckpt",
-                                     log_every=5))
+    # fresh checkpoint dir: a leftover checkpoint at step 20 would resume
+    # past the loop and train zero steps
+    with tempfile.TemporaryDirectory(prefix="quickstart_ckpt_") as ckpt_dir:
+        report = run(cfg, mesh,
+                     DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                global_batch=4),
+                     opt_cfg=OptConfig(lr=1e-3, total_steps=20,
+                                       warmup_steps=2),
+                     loop_cfg=LoopConfig(total_steps=20, ckpt_every=10,
+                                         ckpt_dir=ckpt_dir, log_every=5))
     print(f"loss {report.losses[0]:.3f} -> {report.final_loss:.3f}")
 
     # ---- 3. serve -------------------------------------------------------

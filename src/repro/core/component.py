@@ -48,6 +48,12 @@ class Component(Hookable):
         self.cluster_id = 0         # set by Engine.compute_clusters: the
                                     # sequential-execution group a windowed
                                     # scheduler assigns this component to
+        self.cluster_affinity = None  # optional group key: components
+                                    # sharing a non-None affinity are fused
+                                    # into one cluster even without a
+                                    # fusing connection (subsystems declare
+                                    # their own sequential islands, e.g.
+                                    # the event fabric's chip DMA + links)
         self.ports: dict = {}
         # Fault-injection inputs (written by FaultInjector hook, read here):
         self.fault_failed = False

@@ -91,9 +91,16 @@ class Connection(Hookable):
         the invariant the lookahead window is derived from (the old
         deliver-then-dispatch chain created the destination event with
         zero delay from the deliver event, which would force the window
-        to zero)."""
-        self.engine.post(Event(time=arrival_ps, component=self,
-                               kind="deliver", payload=request))
+        to zero).
+
+        The deliver event exists purely so connection-attached hooks can
+        observe arrival (``REQ_DELIVER``); on a hook-free connection it
+        is skipped, halving the event volume on busy transports like the
+        event fabric's bus.  (``LimitedConnection`` overrides this: its
+        deliver event is load-bearing slot bookkeeping.)"""
+        if self._hooks:
+            self.engine.post(Event(time=arrival_ps, component=self,
+                                   kind="deliver", payload=request))
         self.engine.post(Event(time=arrival_ps, component=request.dst,
                                kind="request", payload=request))
 

@@ -99,6 +99,11 @@ class Engine(Hookable):
         self.events_processed = 0
         self.batch_widths: list = []        # events per execution round
         self.window_widths: list = []       # filled by windowed schedulers
+        self.round_group_sizes: list = []   # per-round events per cluster
+                                            # (only when the scheduler sets
+                                            # record_group_sizes; feeds the
+                                            # architectural-speedup model in
+                                            # benchmarks/fabric_contention)
         if scheduler is None:
             scheduler = "batch" if parallel else "serial"
         self.scheduler = make_scheduler(scheduler,
@@ -179,13 +184,25 @@ class Engine(Hookable):
     def compute_clusters(self) -> typing.List[int]:
         """Partition registered items into sequential clusters.
 
-        A connection is *fused* with all its endpoint owners when its
-        send path can create same-time cross-component events (zero
-        latency) or mutates shared state senders race on (LinkConnection
-        occupancy, attached hooks -- ``Connection.stateful_send``).
+        Two fusion rules feed one union-find:
+
+        * A connection is *fused* with all its endpoint owners when its
+          send path can create same-time cross-component events (zero
+          latency) or mutates shared state senders race on
+          (LinkConnection occupancy, attached hooks --
+          ``Connection.stateful_send``).
+        * Components sharing a non-None ``cluster_affinity`` key are
+          fused with each other.  Affinity lets a subsystem declare its
+          own sequential islands without wiring artificial zero-latency
+          connections -- the event fabric groups each chip's DMA engine
+          with that chip's four ICI links this way, so the dominant
+          DMA<->own-link traffic stays intra-cluster while distinct
+          chips (and the pod DCN/bisection links) parallelize.
+
         Components inside one cluster must execute sequentially; distinct
         clusters only interact through >= min-latency connections, which
-        is what makes the lookahead window safe.
+        is what makes the lookahead window safe (fusing more is always
+        safe, only slower).
 
         Returns cluster id per rank and annotates each registered item
         with ``item.cluster_id``.
@@ -205,7 +222,11 @@ class Engine(Hookable):
                 parent[max(ra, rb)] = min(ra, rb)
 
         self._fused_connections: set = set()
+        affinity_root: dict = {}
         for item in self._components:
+            aff = getattr(item, "cluster_affinity", None)
+            if aff is not None:
+                union(affinity_root.setdefault(aff, item.rank), item.rank)
             endpoints = getattr(item, "endpoints", None)
             if endpoints is None:
                 continue                    # not a connection
@@ -333,6 +354,12 @@ class RoundScheduler(Scheduler):
     use_pool = False
     strict_window = False
     record_window_widths = False
+    # Record per-round events-per-cluster tuples (sorted by cluster id,
+    # the same order the pool chunks tasks in) into
+    # ``engine.round_group_sizes`` -- the input to the architectural
+    # (critical-path) speedup model benchmarks report.  Off by default:
+    # long runs would accumulate one tuple per round.
+    record_group_sizes = False
     # One-tick windows must defer even same-group posts to the commit
     # phase: a same-time post from a *lower-rank* group (e.g. a
     # zero-latency connection's request) would otherwise be committed
@@ -404,6 +431,9 @@ class RoundScheduler(Scheduler):
                 eng.batch_widths.append(executed)
                 if self.record_window_widths:
                     eng.window_widths.append(executed)
+                if self.record_group_sizes:
+                    eng.round_group_sizes.append(
+                        tuple(ctx.executed for ctx in tasks))
 
                 posts: list = []
                 for ctx in tasks:

@@ -6,7 +6,11 @@ discrete-event simulation, cf. ACALSim / Huerta 2025):
 
 * Components are partitioned into *clusters*: a connection whose send
   path is zero-latency or mutates shared state fuses with its endpoint
-  owners (``Engine.compute_clusters``).  Within a cluster execution is
+  owners, and components declaring a shared ``cluster_affinity`` fuse
+  with each other (``Engine.compute_clusters`` -- the event fabric uses
+  affinity to make each chip's DMA engine + ICI links one cluster while
+  its latency-carrying bus keeps distinct chips, the pod DCN/bisection
+  links and the controller un-fused).  Within a cluster execution is
   sequential in (time, rank, seq) order -- exactly serial's relative
   order for those components.
 * Across clusters, events can only be created by ``Connection.send``,

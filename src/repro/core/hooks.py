@@ -115,14 +115,26 @@ class FaultInjector(Hook):
 
     ``plan`` maps component-name -> list of (time_ps, action, arg):
       * ("fail", None)           -- component stops handling events
+      * ("drop", None)           -- alias for "fail": events addressed to
+                                    the component are dropped on the
+                                    floor (the natural reading for a
+                                    link: in-flight transfers are lost)
       * ("slow", factor)         -- durations multiplied by factor
       * ("recover", None)        -- undo both
+      * ("transient", dur_ps)    -- sugar: "fail" now, auto-"recover"
+                                    ``dur_ps`` later (a flapping link /
+                                    glitching component).  Anything lost
+                                    during the outage stays lost --
+                                    under the event fabric's ring
+                                    dependency a transient link fault
+                                    therefore stalls the whole ring, not
+                                    just the sender's chain.
 
     Targets are chips (``chip3.core`` compute straggler, ``chip3.prog``
     failure) and, under the event fabric, individual interconnect links
     and DMA engines (``fabric.pod0.ici[0,1]+x`` -> a *straggler link*:
-    every transfer crossing it stretches by ``factor``; see
-    docs/fabric.md).
+    every transfer crossing it stretches by ``factor``).  The full plan
+    grammar with worked examples lives in docs/faults.md.
     The injector flips flags that well-behaved components consult inside
     their own ``handle`` -- state is still only mutated by the owner
     (no-magic is preserved: the hook only sets an *input* flag the
@@ -130,7 +142,20 @@ class FaultInjector(Hook):
     """
 
     def __init__(self, plan: dict) -> None:
-        self.plan = {k: sorted(v) for k, v in plan.items()}
+        self.plan = {k: sorted(self._expand(v)) for k, v in plan.items()}
+
+    @staticmethod
+    def _expand(actions):
+        out = []
+        for t, action, arg in actions:
+            if action == "transient":
+                out.append((t, "fail", None))
+                out.append((t + int(arg), "recover", None))
+            elif action == "drop":
+                out.append((t, "fail", None))
+            else:
+                out.append((t, action, arg))
+        return out
 
     def func(self, ctx: HookCtx) -> None:
         if ctx.position != EVENT_START:

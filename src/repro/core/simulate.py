@@ -100,10 +100,11 @@ def simulate(hlo_text: str = None, cost: HloCost = None,
     defaults to ``spec.fabric``.  See docs/fabric.md.
 
     ``faults``: {component_name: [(time_s, action, arg), ...]} — forwarded
-    to :class:`FaultInjector` (times converted to ps).  With the event
-    fabric the plan may also target links / DMA engines by name, e.g.
-    ``{"fabric.pod0.ici[0,1]+x": [(0.0, "slow", 8.0)]}`` for a degraded
-    (straggler) link.
+    to :class:`FaultInjector` (times converted to ps; a ``"transient"``
+    action's duration arg is in seconds and converted too).  With the
+    event fabric the plan may also target links / DMA engines by name,
+    e.g. ``{"fabric.pod0.ici[0,1]+x": [(0.0, "slow", 8.0)]}`` for a
+    degraded (straggler) link.  Full plan grammar: docs/faults.md.
     """
     assert (hlo_text is None) != (cost is None), "pass hlo_text xor cost"
     if cost is None:
@@ -118,7 +119,9 @@ def simulate(hlo_text: str = None, cost: HloCost = None,
     # stateful_send, fusing clusters and shrinking engine parallelism.
     system.engine.accept_hook(metrics)
     if faults:
-        plan = {name: [(s_to_ps(t), a, arg) for (t, a, arg) in acts]
+        plan = {name: [(s_to_ps(t), a,
+                        s_to_ps(arg) if a == "transient" else arg)
+                       for (t, a, arg) in acts]
                 for name, acts in faults.items()}
         targets = (system.cores + system.programs
                    + system.fabric.fault_targets())

@@ -146,6 +146,30 @@ class Topology:
             return "ring_y"
         return "block_2d"
 
+    # -- per-link latencies (consumed by the event fabric) ----------------
+
+    def link_latency_s(self, link_name: str) -> float:
+        """Propagation latency of one named link: DCN uplinks pay the
+        cross-pod one-way latency, ICI links (and the bisection
+        aggregates, which stand in for bundles of ICI wrap links) one
+        torus hop.  Accepts both bare topology names (``pod0.dcn``,
+        ``pod0.ici[0,1]+x``) and event-fabric component names
+        (``fabric.pod0.dcn``)."""
+        name = link_name[len("fabric."):] \
+            if link_name.startswith("fabric.") else link_name
+        if name.endswith(".dcn"):
+            return self.spec.chip.dcn_latency_s
+        return self.spec.chip.ici_hop_latency_s
+
+    def min_link_latency_s(self) -> float:
+        """Smallest per-hop latency any fabric link carries.  This bounds
+        the latency budget the event fabric may put on its bus legs (and
+        therefore the lookahead window its clusters run under): every
+        transfer's step latency must cover the request leg plus the
+        ack/chunk leg, so no leg may exceed a fraction of this."""
+        return min(self.spec.chip.ici_hop_latency_s,
+                   self.spec.chip.dcn_latency_s)
+
     # -- per-collective analytic times (seconds) --------------------------
     # B = full (unsharded-along-group) payload bytes handled per participant,
     # i.e. the operand bytes of the HLO op for all-reduce / all-to-all /

@@ -12,8 +12,8 @@ plumb a ``fabric=`` knob through (default ``SystemSpec.fabric``).
 """
 from .base import FabricBackend, FabricController
 from .analytic import AnalyticFabric
-from .event import (EventFabric, FabricLink, DmaEngine, DmaStep, Xfer,
-                    decompose)
+from .event import (EventFabric, FabricLink, DmaEngine, DmaStep, Legs,
+                    Xfer, decompose, make_legs)
 
 FABRICS: dict = {}
 
@@ -40,6 +40,6 @@ register_fabric("event", EventFabric)
 
 __all__ = [
     "FabricBackend", "FabricController", "AnalyticFabric", "EventFabric",
-    "FabricLink", "DmaEngine", "DmaStep", "Xfer", "decompose",
-    "FABRICS", "register_fabric", "make_fabric",
+    "FabricLink", "DmaEngine", "DmaStep", "Legs", "Xfer", "decompose",
+    "make_legs", "FABRICS", "register_fabric", "make_fabric",
 ]

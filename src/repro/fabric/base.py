@@ -9,9 +9,11 @@ asynchronous protocol:
 * ``System`` calls :meth:`FabricBackend.install`, which registers the
   backend's components (at minimum a :class:`FabricController`) on the
   engine and wires the coordinator's ``fabric`` port to the controller
-  over a zero-latency connection (zero-latency => the lookahead
-  scheduler fuses coordinator + fabric into one sequential cluster, so
-  every scheduler drains the fabric identically).
+  over a zero-latency connection -- the lookahead scheduler therefore
+  fuses coordinator + controller into one sequential cluster, while the
+  rest of a backend's component graph chooses its own cluster layout
+  (the ``event`` backend rides a latency-carrying bus so its links and
+  DMA engines parallelize; see ``repro.fabric.event``).
 * When a replica group has fully joined, the coordinator sends a
   ``start`` request carrying ``(key, kind, bytes, group)``.
 * The controller answers with a ``fabric_done`` request for the key when

@@ -22,15 +22,33 @@ backend slower, i.e. more faithful -- exactly when transfers overlap on
 shared links (multi-tenant traces, concurrent cross-pod groups,
 multi-hop collective-permutes through a common chip).
 
-All fabric traffic rides zero-latency connections, so the lookahead
-scheduler fuses coordinator + controller + DMAs + links into one
-sequential cluster and every scheduler drains the fabric in the same
-(time, rank, seq) order -- bit-identical results by construction.
+Fabric traffic rides the latency-carrying :class:`FabricXbar`: every
+protocol leg (program dispatch, transfer request, ack/chunk return,
+completion) is priced out of the step's own hop/DCN latency budget (see
+:class:`Legs`), so no leg is zero-latency and the lookahead scheduler
+does NOT fuse the fabric into one sequential cluster.  Instead each
+chip's DMA engine plus its four ICI links form one cluster (via
+``cluster_affinity``) and every DCN/bisection link is its own, letting
+a windowed scheduler replay link traffic for distinct chips
+concurrently.  The leg budget is carved so each step still totals
+exactly ``bytes/bw + step_latency`` and a whole program's walltime is
+identical to a zero-latency-bus replay -- parity with the analytic
+oracle is preserved to ``s_to_ps`` rounding, and all schedulers remain
+bit-identical (the commit-phase ordering argument in docs/engine.md).
+
+Ring steps additionally carry the ring *data dependency*: each chip's
+step ``i+1`` waits for the chunks its two ring neighbors forwarded in
+step ``i`` (delivered as ``chunk`` requests to the downstream DMA).  On
+a healthy symmetric ring the chunks arrive exactly when the chip's own
+acks do, so timing is unchanged; under a degraded or transiently failed
+link the stall now propagates around the whole ring instead of pinning
+only the sending chip's chain -- the honest failure mode.
 
 Fault surface: links and DMA engines are ordinary components, so
 ``hooks.FaultInjector`` can degrade a *single link* by name (e.g.
 ``{"fabric.pod0.ici[0,1]+x": [(0.0, "slow", 8.0)]}``) -- straggler
-links, not just straggler chips.
+links, flapping ("transient") links, not just straggler chips.  See
+docs/faults.md for the full plan grammar.
 """
 from __future__ import annotations
 
@@ -48,24 +66,81 @@ from .base import FabricBackend, FabricController
 
 @dataclasses.dataclass(frozen=True)
 class Xfer:
-    """One transfer on one named link (parallel within a DmaStep)."""
+    """One transfer on one named link (parallel within a DmaStep).
+
+    ``dst_chip`` names the ring neighbor whose DMA engine consumes the
+    chunk (None for transfers without a modeled consumer, e.g. DCN or
+    bisection aggregates): the link forwards a ``chunk`` notification
+    there, which the neighbor's matching step waits on.
+    """
     link: str
     bytes: int
+    dst_chip: typing.Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)
 class DmaStep:
-    """Parallel transfers + a post-step latency (hop / DCN one-way)."""
+    """Parallel transfers + a post-step latency (hop / DCN one-way).
+
+    ``arrivals`` is the number of neighbor ``chunk`` notifications this
+    step must collect (in addition to its own transfer acks) before the
+    program may advance -- the ring data dependency.
+    """
     xfers: tuple                  # tuple[Xfer, ...]; may be empty
     latency_ps: int = 0
+    arrivals: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Legs:
+    """Per-kind latency budget of the fabric bus (all integer ps).
+
+    Every leg is carved out of the step latency it accompanies: a step
+    costs ``xfer_ps`` on the request leg, ``bytes/bw`` serializing on
+    the link, and ``latency_ps - xfer_ps`` on the ack/chunk leg -- so
+    one step still totals ``bytes/bw + latency_ps``.  The final step's
+    ack additionally absorbs ``exec_ps + done_ps``, cancelling the
+    program-dispatch and completion legs: the whole program's walltime
+    equals the zero-latency-bus replay exactly.  ``floor_ps`` (the
+    xbar's ``min_latency_ps``, hence the lookahead window bound) is the
+    minimum any leg may take; all four default to a quarter of the
+    smallest link latency so even a one-step program (latency = one
+    hop) fits ``exec + xfer + ack + done``.
+    """
+    exec_ps: int                  # controller -> DMA program dispatch
+    xfer_ps: int                  # DMA -> link transfer request
+    done_ps: int                  # DMA -> controller completion
+    floor_ps: int                 # lower bound on any bus leg
+
+
+ZERO_LEGS = Legs(0, 0, 0, 0)
+
+
+def make_legs(topo) -> Legs:
+    """Size the bus legs from the topology's smallest link latency.
+
+    A zero hop latency degrades gracefully: all legs become zero, the
+    xbar turns zero-latency and ``Engine.compute_clusters`` fuses the
+    whole fabric back into one sequential cluster (the pre-latency
+    behavior -- correct, just serial).
+    """
+    q = s_to_ps(topo.min_link_latency_s()) // 4
+    return Legs(exec_ps=q, xfer_ps=q, done_ps=q, floor_ps=q)
 
 
 @dataclasses.dataclass(frozen=True)
 class _Xmit:
-    """Routing envelope for xfer / xfer_done requests on the fabric bus."""
+    """Routing envelope for xfer / xfer_done / chunk requests on the
+    fabric bus.  ``ack_ps`` is the connection latency of the returning
+    ack AND of the forwarded neighbor chunk (computed by the issuing
+    DMA from the step's latency budget); ``step`` tags which program
+    step a chunk belongs to at the consuming neighbor."""
     link: str
     chip: int
     key: typing.Any
+    ack_ps: int = 0
+    dst_chip: typing.Optional[int] = None
+    step: int = 0
 
 
 def _dma_name(chip: int) -> str:
@@ -83,7 +158,9 @@ class FabricLink(Component):
     """A serialized, bandwidth-limited channel (ICI link, DCN uplink or
     bisection aggregate).  Transfers queue on ``busy_until_ps``; the
     FaultInjector's ``slow`` action stretches transfer durations (a
-    degraded / straggler link)."""
+    degraded / straggler link), ``fail``/``transient`` drops transfers
+    on the floor (they are never acked -- the sender, and with ring
+    dependencies the whole ring, stalls)."""
 
     def __init__(self, name: str, bandwidth: float) -> None:
         super().__init__(name)
@@ -106,22 +183,46 @@ class FabricLink(Component):
             self.schedule("xmit_done", end - self.engine.now,
                           payload=req.payload)
         elif event.kind == "xmit_done":
-            self.port("bus").send(Request(
-                src=self.port("bus"), dst=None, kind="xfer_done",
-                payload=event.payload))
+            xm: _Xmit = event.payload
+            bus = self.port("bus")
+            bus.send(Request(src=bus, dst=None, kind="xfer_done",
+                             payload=xm))
+            if xm.dst_chip is not None:
+                # ring data dependency: forward the chunk to the
+                # consuming neighbor's DMA engine
+                bus.send(Request(src=bus, dst=None, kind="chunk",
+                                 payload=xm))
 
 
 class DmaEngine(Component):
     """Walks per-collective hop programs for one chip: issue a step's
-    transfers, wait for all of them, apply the step latency, advance.
-    Multiple collectives (different keys) may be in flight at once --
-    their transfers contend on the links, not here."""
+    transfers, wait for all of their acks plus any neighbor chunk
+    arrivals the step declares, advance.  Multiple collectives
+    (different keys) may be in flight at once -- their transfers contend
+    on the links, not here.
 
-    def __init__(self, name: str, chip: int) -> None:
+    Step latency rides the bus legs (see :class:`Legs`), not a local
+    timer: the ack returns ``latency_ps - xfer_ps`` after serialization,
+    so the step still totals ``bytes/bw + latency_ps``.  A FaultInjector
+    ``slow`` on this DMA engine stretches the step turnaround by
+    ``(factor - 1) x latency`` on top (a straggling DMA issues hops more
+    slowly), preserving the pre-latency fault arithmetic exactly.
+    """
+
+    def __init__(self, name: str, chip: int, legs: Legs = ZERO_LEGS) -> None:
         super().__init__(name)
         self.chip = chip
+        self.legs = legs
         self._progs: dict = {}     # key -> [steps, idx]
-        self._left: dict = {}      # key -> outstanding xfers this step
+        self._acks: dict = {}      # key -> outstanding xfer acks this step
+        self._arrived: dict = {}   # (key, step idx) -> banked chunk count
+        self._timed: set = set()   # keys waiting on a step_done timer
+
+    def progress(self) -> dict:
+        """Current step index per in-flight collective key (observable
+        for ring-stall studies: a stalled ring shows every member pinned
+        within one step of the faulted link's sender)."""
+        return {key: prog[1] for key, prog in self._progs.items()}
 
     def handle(self, event: Event) -> None:
         if event.kind == "request":
@@ -132,51 +233,113 @@ class DmaEngine(Component):
                 self._start_step(key)
             elif req.kind == "xfer_done":
                 key = req.payload.key
-                self._left[key] -= 1
-                if self._left[key] == 0:
-                    steps, idx = self._progs[key]
-                    self.schedule("step_done", self._lat(steps[idx]),
-                                  payload=key)
+                self._acks[key] -= 1
+                self._maybe_finish_step(key)
+            elif req.kind == "chunk":
+                xm: _Xmit = req.payload
+                slot = (xm.key, xm.step)
+                self._arrived[slot] = self._arrived.get(slot, 0) + 1
+                self._maybe_finish_step(xm.key)
         elif event.kind == "step_done":
-            prog = self._progs[key := event.payload]
-            prog[1] += 1
-            if prog[1] < len(prog[0]):
-                self._start_step(key)
-            else:
-                del self._progs[key]
-                self._left.pop(key, None)
-                self.port("bus").send(Request(
-                    src=self.port("bus"), dst=None, kind="dma_done",
-                    payload=(self.chip, key)))
+            key = event.payload
+            self._timed.discard(key)
+            self._advance(key)
 
-    def _lat(self, step: DmaStep) -> int:
-        """Step turnaround; a FaultInjector 'slow' on this DMA engine
-        stretches it (a straggling DMA issues hops more slowly)."""
-        return int(round(step.latency_ps * self.fault_slow_factor))
+    def _maybe_finish_step(self, key) -> None:
+        prog = self._progs.get(key)
+        if prog is None or key in self._timed:
+            return                 # late chunk for a finished/timed step
+        steps, idx = prog
+        if self._acks.get(key, 0) > 0:
+            return
+        step: DmaStep = steps[idx]
+        if self._arrived.get((key, idx), 0) < step.arrivals:
+            return                 # still waiting on ring neighbors
+        self._arrived.pop((key, idx), None)
+        extra = int(round(step.latency_ps * (self.fault_slow_factor - 1.0)))
+        if extra > 0:              # straggling DMA: stretched turnaround
+            self._timed.add(key)
+            self.schedule("step_done", extra, payload=key)
+        else:
+            self._advance(key)
+
+    def _advance(self, key) -> None:
+        prog = self._progs[key]
+        prog[1] += 1
+        if prog[1] < len(prog[0]):
+            self._start_step(key)
+        else:
+            del self._progs[key]
+            self._acks.pop(key, None)
+            for slot in [s for s in self._arrived if s[0] == key]:
+                del self._arrived[slot]
+            self.port("bus").send(Request(
+                src=self.port("bus"), dst=None, kind="dma_done",
+                payload=(self.chip, key)))
 
     def _start_step(self, key) -> None:
         steps, idx = self._progs[key]
         step: DmaStep = steps[idx]
+        final = idx == len(steps) - 1
+        legs = self.legs
         if not step.xfers:
-            self.schedule("step_done", self._lat(step), payload=key)
+            # Timed step (no transfers): the latency is waited locally; a
+            # final timed step also absorbs the exec/done legs so program
+            # walltime stays exact.
+            residual = step.latency_ps - (legs.exec_ps + legs.done_ps
+                                          if final else 0)
+            self._timed.add(key)
+            self.schedule(
+                "step_done",
+                max(0, int(round(residual * self.fault_slow_factor))),
+                payload=key)
             return
-        self._left[key] = len(step.xfers)
+        ack = step.latency_ps - legs.xfer_ps
+        if final:
+            ack -= legs.exec_ps + legs.done_ps
+        ack = max(legs.floor_ps, ack)
+        self._acks[key] = len(step.xfers)
         for x in step.xfers:
             self.port("bus").send(Request(
                 src=self.port("bus"), dst=None, kind="xfer",
                 size_bytes=int(x.bytes),
-                payload=_Xmit(x.link, self.chip, key)))
+                payload=_Xmit(x.link, self.chip, key, ack, x.dst_chip, idx)))
 
 
 class FabricXbar(Connection):
     """Routing bus for all fabric traffic.  Routing lives in the
     connection (DP-3): components address links / DMA engines / the
-    controller by *name* in the request payload, never by reference."""
+    controller by *name* in the request payload, never by reference.
 
-    def __init__(self, name: str, controller) -> None:
+    Unlike a plain Connection it prices each leg of the replay protocol
+    individually (:class:`Legs`); ``min_latency_ps`` -- the bound the
+    lookahead window derives from -- is the legs' common floor.  With a
+    nonzero floor the xbar is never fused, so its endpoint clusters
+    (chip DMA+links islands, DCN/bisection links, the controller) replay
+    in parallel under windowed schedulers.
+    """
+
+    def __init__(self, name: str, controller, legs: Legs = ZERO_LEGS) -> None:
         super().__init__(name)
         self.controller = controller
+        self.legs = legs
         self.registry: dict = {}
+
+    @property
+    def min_latency_ps(self) -> int:
+        return self.legs.floor_ps
+
+    def transfer_time_ps(self, request: Request) -> int:
+        legs = self.legs
+        if request.kind == "xfer":
+            return legs.xfer_ps
+        if request.kind in ("xfer_done", "chunk"):
+            return request.payload.ack_ps
+        if request.kind == "exec":
+            return legs.exec_ps
+        if request.kind == "dma_done":
+            return legs.done_ps
+        return legs.floor_ps
 
     def attach(self, component, port_name: str = "bus") -> None:
         self.plug(component.port(port_name))
@@ -189,6 +352,8 @@ class FabricXbar(Connection):
             request.dst = self.registry[request.payload.link]
         elif request.kind == "xfer_done":
             request.dst = self.registry[_dma_name(request.payload.chip)]
+        elif request.kind == "chunk":
+            request.dst = self.registry[_dma_name(request.payload.dst_chip)]
         elif request.kind == "exec":
             request.dst = self.registry[_dma_name(request.payload[0])]
         elif request.kind == "dma_done":
@@ -231,18 +396,46 @@ class EventController(FabricController):
 
 # -- collective decomposition (mirrors topology.py's analytic formulas) ------
 
+def _ring_neighbors(topo, members, axis: str) -> tuple:
+    """Successor/predecessor maps along ``axis`` for the physical wrap
+    rings the members form (rows keyed by the orthogonal coordinates).
+    Members alone in their row -- e.g. cross-pod representatives whose
+    closing exchange is not a physical ring -- get no neighbors and
+    therefore no data dependency."""
+    rows: dict = {}
+    for d in members:
+        pod, y, x = topo.coords(d)
+        rows.setdefault((pod, y) if axis == "x" else (pod, x), []).append(d)
+    succ: dict = {}
+    pred: dict = {}
+    for row in rows.values():
+        if len(row) < 2:
+            continue
+        row.sort(key=lambda d: topo.coords(d)[2 if axis == "x" else 1])
+        for i, d in enumerate(row):
+            succ[d] = row[(i + 1) % len(row)]
+            pred[d] = row[(i - 1) % len(row)]
+    return succ, pred
+
+
 def _ring_steps(topo, members, axis: str, B: float, phases: int,
                 ring_n: int = None) -> dict:
     """Bidirectional ring: each step moves B/(2n) per direction per chip.
-    ``phases*(n-1)`` steps of ``chunk/bw + hop`` reproduce ``_ring_time``."""
+    ``phases*(n-1)`` steps of ``chunk/bw + hop`` reproduce ``_ring_time``.
+    Each step carries the ring data dependency: the +axis chunk feeds
+    the successor, the -axis chunk the predecessor, and the chip's next
+    step waits for the matching chunks from both neighbors."""
     n = ring_n or len(members)
     hop = s_to_ps(topo.spec.chip.ici_hop_latency_s)
     chunk = int(round(B / (2 * n)))
     nsteps = phases * (n - 1)
+    succ, pred = _ring_neighbors(topo, members, axis)
     out = {}
     for d in members:
         plus, minus = _ici(topo, d, "+" + axis), _ici(topo, d, "-" + axis)
-        out[d] = [DmaStep((Xfer(plus, chunk), Xfer(minus, chunk)), hop)
+        arrivals = (d in succ) + (d in pred)
+        out[d] = [DmaStep((Xfer(plus, chunk, succ.get(d)),
+                           Xfer(minus, chunk, pred.get(d))), hop, arrivals)
                   for _ in range(nsteps)]
     return out
 
@@ -370,6 +563,7 @@ class EventFabric(FabricBackend):
         self.links: typing.List[FabricLink] = []
         self.dcn: typing.List[FabricLink] = []
         self.dmas: typing.List[DmaEngine] = []
+        self.legs: Legs = make_legs(self.topology)
 
     def make_controller(self) -> FabricController:
         return EventController("fabric.ctrl", self)
@@ -377,17 +571,27 @@ class EventFabric(FabricBackend):
     def _install_extra(self, engine) -> None:
         spec = self.spec
         topo = self.topology
-        xbar = engine.register(FabricXbar("fabric.xbar", self.controller))
+        legs = self.legs
+        xbar = engine.register(
+            FabricXbar("fabric.xbar", self.controller, legs))
         xbar.attach(self.controller)
         for d in range(spec.total_chips):
-            self.dmas.append(engine.register(DmaEngine(_dma_name(d), d)))
-            xbar.attach(self.dmas[-1])
+            dma = engine.register(DmaEngine(_dma_name(d), d, legs))
+            # one lookahead cluster per chip: the DMA engine and the
+            # chip's own four ICI links (its dominant traffic partners)
+            dma.cluster_affinity = f"fabric.chip{d}"
+            self.dmas.append(dma)
+            xbar.attach(dma)
             for dirn in ("+x", "-x", "+y", "-y"):
                 link = FabricLink(_ici(topo, d, dirn),
                                   spec.chip.ici_link_bandwidth)
+                link.cluster_affinity = f"fabric.chip{d}"
                 self.links.append(engine.register(link))
                 xbar.attach(link)
         for p in range(spec.num_pods):
+            # pod-shared channels stay their own clusters: they are
+            # contended by many chips and fusing them anywhere would
+            # serialize that whole pod
             up = FabricLink(f"fabric.pod{p}.dcn", spec.dcn_bandwidth_per_pod)
             bis = FabricLink(f"fabric.pod{p}.bisect",
                              spec.bisection_bandwidth_per_pod)

@@ -1,9 +1,11 @@
 """Pluggable fabric tests: registry, analytic/event parity on uncongested
 micro-benchmarks, congestion the analytic backend cannot express,
-scheduler bit-identity on event-fabric runs, and straggler links."""
+scheduler bit-identity on event-fabric runs (whose bus legs carry real
+latency, so the fabric splits into per-chip lookahead clusters),
+straggler links, and ring-wide stalls under transient link faults."""
 import pytest
 
-from repro.core import SystemSpec, System, simulate
+from repro.core import SystemSpec, System, s_to_ps, simulate
 from repro.core.hlo import CollectiveRecord, HloCost, TraceOp
 from repro.core.system import _RunOp
 from repro.fabric import (FABRICS, AnalyticFabric, EventFabric, make_fabric,
@@ -170,6 +172,50 @@ def test_disjoint_rings_do_not_contend():
     assert t_e == pytest.approx(solo, rel=0.01)
 
 
+# -- cluster derivation: latencied fabric legs un-fuse the fabric ------------
+
+def test_event_fabric_forms_per_chip_clusters():
+    """The fabric bus carries per-leg latency, so the lookahead cluster
+    derivation must NOT fuse the fabric into one sequential island: each
+    chip's DMA + its four ICI links form one cluster (affinity), the
+    pod-shared DCN/bisection links and the coordinator+controller pair
+    are separate, and the window derives from the bus leg floor."""
+    sys_ = System(SPEC, fabric="event", scheduler="lookahead")
+    sys_.engine.compute_clusters()
+    fab = sys_.fabric
+    # coordinator and controller stay fused (zero-latency coord bus)
+    assert sys_.coordinator.cluster_id == fab.controller.cluster_id
+    # per-chip islands: DMA + its own links share; distinct chips don't
+    chip0 = {l.cluster_id for l in fab.links
+             if l.cluster_affinity == "fabric.chip0"}
+    assert chip0 == {fab.dmas[0].cluster_id}
+    assert fab.dmas[0].cluster_id != fab.dmas[1].cluster_id
+    assert fab.dmas[0].cluster_id != fab.controller.cluster_id
+    # pod-shared channels are their own clusters
+    dma_clusters = {d.cluster_id for d in fab.dmas}
+    assert fab.dcn[0].cluster_id not in dma_clusters
+    # the lookahead window is the bus leg floor (a quarter ICI hop here)
+    expect = s_to_ps(SPEC.chip.ici_hop_latency_s) // 4
+    assert fab.legs.floor_ps == expect
+    assert sys_.engine.min_cross_cluster_latency_ps() == expect
+
+
+def test_zero_hop_latency_degrades_to_fused_fabric():
+    """With a zero hop latency there is no budget for bus legs: the xbar
+    becomes zero-latency and the whole fabric fuses back into one
+    sequential cluster (correct, just serial) instead of deriving a
+    zero-width window."""
+    import dataclasses
+    spec = dataclasses.replace(
+        SPEC, chip=dataclasses.replace(SPEC.chip, ici_hop_latency_s=0.0,
+                                       dcn_latency_s=0.0))
+    sys_ = System(spec, fabric="event", scheduler="lookahead")
+    sys_.engine.compute_clusters()
+    fab = sys_.fabric
+    assert fab.legs.floor_ps == 0
+    assert fab.dmas[0].cluster_id == fab.controller.cluster_id
+
+
 # -- scheduler bit-identity on event-fabric runs -----------------------------
 
 def _mixed_cost(layers=3):
@@ -187,6 +233,9 @@ def _mixed_cost(layers=3):
 
 @pytest.mark.parametrize("scheduler", ["batch", "lookahead"])
 def test_event_fabric_bit_identical_across_schedulers(scheduler):
+    """The headline contract: fabric replay over *latency-carrying*
+    connections (per-chip clusters executing concurrently under
+    lookahead) still produces bit-identical reports."""
     cost = _mixed_cost()
     oracle = simulate(cost=cost, spec=SPEC, device_limit=None,
                       fabric="event", scheduler="serial")
@@ -195,6 +244,23 @@ def test_event_fabric_bit_identical_across_schedulers(scheduler):
     assert rep.summary() == oracle.summary()
     assert rep.link_utilization == oracle.link_utilization
     assert rep.events == oracle.events
+
+
+@pytest.mark.parametrize("scheduler", ["batch", "lookahead"])
+def test_event_fabric_bit_identical_under_congestion_and_faults(scheduler):
+    """Harder bit-identity: a multi-tenant congested trace with a
+    straggler link, so cross-cluster chunk/ack traffic, link queueing
+    and fault flags all interleave across the parallel clusters."""
+    kw = dict(spec=SPEC, device_limit=None, fabric="event",
+              faults={"fabric.pod0.ici[0,1]+x": [(0.0, "slow", 4.0)]})
+
+    def sim(sched):
+        return simulate(cost=_mixed_cost(layers=4), scheduler=sched, **kw)
+
+    oracle = sim("serial")
+    rep = sim(scheduler)
+    assert rep.summary() == oracle.summary()
+    assert rep.link_utilization == oracle.link_utilization
 
 
 # -- straggler links (FaultInjector on fabric components) --------------------
@@ -230,3 +296,65 @@ def test_straggler_link_recovers():
                faults={"fabric.pod0.ici[0,1]+x": [
                    (0.0, "slow", 8.0), (base.time_s, "recover", None)]})
     assert base.time_s < rec.time_s
+
+
+# -- ring data dependency: transient link faults stall whole rings -----------
+
+def _ring_system(faults=None):
+    """4-chip x-ring all-reduce on the event fabric, with direct access
+    to the DMA engines so tests can observe per-chip program progress."""
+    sys_ = System(SPEC, fabric="event")
+    if faults:
+        from repro.core.hooks import FaultInjector
+        inj = FaultInjector(faults)
+        for comp in sys_.fabric.fault_targets():
+            comp.accept_hook(inj)
+    op = _RunOp(kind="collective", name="ar", coll_kind="all-reduce",
+                bytes=1e7, group=((0, 1, 2, 3),))
+    sys_.load_trace([op], [0, 1, 2, 3])
+    return sys_
+
+
+def test_transient_link_fault_stalls_whole_ring():
+    """Each ring step waits on its upstream neighbors' forwarded chunks,
+    so a transfer lost to a transient link outage stalls EVERY member of
+    the ring within one step of the fault -- not just the sending chip's
+    chain.  The collective never completes (the chunk is gone), which is
+    what the coordinator's deadline machinery exists to detect."""
+    outage = {"fabric.pod0.ici[0,1]+x":
+              [(s_to_ps(10e-6), "transient", s_to_ps(40e-6))]}
+    sys_ = _ring_system(outage)
+    res = sys_.run(until_s=0.005)
+    assert res["devices_done"] == 0          # ring-wide, permanent stall
+    progress = [idx for d in sys_.fabric.dmas[:4]
+                for idx in d.progress().values()]
+    assert len(progress) == 4                # every member still in flight
+    assert max(progress) - min(progress) <= 1    # pinned around the fault
+    # sanity: the same outage pattern, survived (slow, not drop), completes
+    slow = _sim("all-reduce", 1e7, [0, 1, 2, 3], "event",
+                faults={"fabric.pod0.ici[0,1]+x": [
+                    (10e-6, "slow", 8.0), (50e-6, "recover", None)]})
+    assert slow.devices_done == 4
+
+
+def test_transient_fault_plan_at_simulate_level():
+    """simulate()-level plan grammar: "transient" (fail + auto-recover
+    after a duration, both in seconds) hangs the collective for good --
+    the in-flight transfer was dropped during the outage and the ring
+    dependency never releases.  "drop" is the fail alias for links."""
+    rep = _sim("all-reduce", 1e7, [0, 1, 2, 3], "event", until_s=0.01,
+               faults={"fabric.pod0.ici[0,1]+x":
+                       [(10e-6, "transient", 40e-6)]})
+    assert rep.devices_done == 0             # joined, never completed
+    rep2 = _sim("all-reduce", 1e7, [0, 1, 2, 3], "event", until_s=0.01,
+                faults={"fabric.chip1.dma": [(0.0, "drop", None)]})
+    assert rep2.devices_done == 0
+
+
+def test_ring_dependency_keeps_healthy_timing():
+    """On a healthy symmetric ring the neighbor chunks arrive exactly
+    when a chip's own acks do: adding the dependency must not change
+    uncongested timing (parity with the analytic oracle stays exact)."""
+    a = _sim("all-reduce", 1e7, [0, 1, 2, 3], "analytic")
+    e = _sim("all-reduce", 1e7, [0, 1, 2, 3], "event")
+    assert e.time_s == pytest.approx(a.time_s, rel=1e-9)

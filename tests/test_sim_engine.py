@@ -294,6 +294,40 @@ def test_lookahead_window_derived_from_min_latency():
     assert max(eng.window_widths) > 8
 
 
+def test_cluster_affinity_fuses_components():
+    """Components declaring the same cluster_affinity fuse into one
+    sequential cluster without any connecting wire -- the mechanism the
+    event fabric uses to make each chip's DMA + links one island."""
+    eng = Engine(scheduler="lookahead")
+    a = eng.register(Sink("a"))
+    b = eng.register(Sink("b"))
+    c = eng.register(Sink("c"))
+    a.cluster_affinity = b.cluster_affinity = "island"
+    eng.compute_clusters()
+    assert a.cluster_id == b.cluster_id
+    assert c.cluster_id != a.cluster_id
+
+
+def test_lookahead_window_on_event_fabric():
+    """Event-fabric runs must derive a *nonzero* window from the fabric
+    bus legs (a quarter ICI hop), i.e. the fabric no longer fuses into
+    one cluster and replay parallelizes across chips."""
+    from repro.core import System
+    from repro.core.system import _RunOp
+    spec = SystemSpec(pod_shape=(2, 2))
+    sys_ = System(spec, fabric="event", scheduler="lookahead")
+    op = _RunOp(kind="collective", name="ar", coll_kind="all-reduce",
+                bytes=1e5, group=((0, 1),))
+    sys_.load_trace([op], [0, 1])
+    res = sys_.run()
+    assert res["devices_done"] == 2
+    # window = min(ctrl_latency, hop/4) = hop/4 with the default chip
+    expect = s_to_ps(spec.chip.ici_hop_latency_s) // 4
+    assert sys_.engine.scheduler.window_ps == expect
+    # and genuine multi-event windows were executed
+    assert max(sys_.engine.window_widths) > 1
+
+
 def test_lookahead_fuses_stateful_connections():
     """LinkConnection senders race on busy_until_ps, so the lookahead
     scheduler must place both endpoint owners in one sequential cluster."""

@@ -1,0 +1,87 @@
+"""Docs smoke check — keeps README.md and docs/*.md from rotting.
+
+Three checks, exit nonzero on any failure:
+
+1. every relative markdown link in README.md and docs/*.md resolves to
+   a file that exists (anchors and external URLs are skipped);
+2. every ```python code block parses, and its top-level import
+   statements execute (so renamed/removed APIs break CI, not readers);
+3. README.md python blocks are additionally *executed in full* — the
+   quickstart must actually run, not just import.
+
+Run as: PYTHONPATH=src python tools/docs_smoke.py
+(CI runs it next to examples/quickstart.py.)
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+import sys
+import traceback
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+CODE_RE = re.compile(r"```python\n(.*?)```", re.S)
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)]+)\)")
+
+
+def doc_files():
+    return [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+
+
+def check_links(path: pathlib.Path, text: str, errors: list) -> int:
+    n = 0
+    for target in LINK_RE.findall(text):
+        target = target.split("#", 1)[0].strip()
+        if not target or "://" in target or target.startswith("mailto:"):
+            continue
+        n += 1
+        if not (path.parent / target).exists():
+            errors.append(f"{path.relative_to(ROOT)}: broken link -> {target}")
+    return n
+
+
+def check_code(path: pathlib.Path, text: str, errors: list,
+               run_full: bool = False) -> int:
+    n = 0
+    for i, block in enumerate(CODE_RE.findall(text)):
+        n += 1
+        where = f"{path.relative_to(ROOT)} python block #{i + 1}"
+        try:
+            tree = ast.parse(block)
+        except SyntaxError as e:
+            errors.append(f"{where}: syntax error: {e}")
+            continue
+        try:
+            if run_full:
+                exec(compile(tree, where, "exec"), {"__name__": "__docs__"})
+            else:
+                for node in tree.body:
+                    if isinstance(node, (ast.Import, ast.ImportFrom)):
+                        mod = ast.Module(body=[node], type_ignores=[])
+                        exec(compile(mod, where, "exec"), {})
+        except Exception:
+            errors.append(f"{where}: {'execution' if run_full else 'import'}"
+                          f" failed:\n{traceback.format_exc(limit=3)}")
+    return n
+
+
+def main() -> int:
+    errors: list = []
+    links = blocks = 0
+    for path in doc_files():
+        text = path.read_text()
+        links += check_links(path, text, errors)
+        blocks += check_code(path, text, errors,
+                             run_full=path.name == "README.md")
+    print(f"docs_smoke: {len(doc_files())} files, {links} relative links, "
+          f"{blocks} python blocks checked")
+    for e in errors:
+        print(f"FAIL {e}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -107,19 +107,33 @@ class JitterNode(Component):
 
 
 def _run_diverged(scheduler: str, workers: int, n: int = 32,
-                  ticks: int = 1200):
-    eng = Engine(scheduler=scheduler, max_workers=workers)
-    nodes = [eng.register(JitterNode(f"n{i}", i, ticks)) for i in range(n)]
-    for i in range(n):
-        conn = eng.register(Connection(f"ring{i}", latency_s=4e-9))
-        conn.plug(nodes[i].port("out")).plug(nodes[(i + 1) % n].port("in"))
-    for nd in nodes:
-        nd.start()
-    t0 = time.time()
-    end = eng.run()
-    wall = time.time() - t0
-    state = tuple((nd.sig, nd.count, nd.received) for nd in nodes)
-    return state, end, eng, wall
+                  ticks: int = 1200, repeat: int = 3):
+    """Best-of-``repeat`` wall clock (single-shot timings on shared CI
+    hosts swing 30%+); every repetition's state must be identical --
+    asserted here across repetitions, and by the caller against the
+    serial oracle."""
+    best = None
+    state = None
+    for _ in range(max(1, repeat)):
+        eng = Engine(scheduler=scheduler, max_workers=workers)
+        nodes = [eng.register(JitterNode(f"n{i}", i, ticks))
+                 for i in range(n)]
+        for i in range(n):
+            conn = eng.register(Connection(f"ring{i}", latency_s=4e-9))
+            conn.plug(nodes[i].port("out")).plug(nodes[(i + 1) % n].port("in"))
+        for nd in nodes:
+            nd.start()
+        t0 = time.perf_counter()
+        end = eng.run()
+        wall = time.perf_counter() - t0
+        rep_state = tuple((nd.sig, nd.count, nd.received) for nd in nodes)
+        if state is None:
+            state = rep_state
+        assert rep_state == state, \
+            f"{scheduler}@{workers} diverged across repetitions"
+        if best is None or wall < best:
+            best = wall
+    return state, end, eng, best
 
 
 def main() -> int:
@@ -140,6 +154,7 @@ def main() -> int:
               f"events_per_s={eps:.0f}|rounds={len(widths)}")
         bench["aligned"][sched] = {"wall_s": round(wall, 4),
                                    "events": rep.events,
+                                   "events_per_sec": round(eps),
                                    "rounds": len(widths)}
     w = np.asarray(rep_oracle.batch_widths)
     print(f"# aligned trace: median batch width "
@@ -160,20 +175,34 @@ def main() -> int:
                   f"events_per_s={eps:.0f}|rounds={rounds}")
             bench["diverged"].setdefault(sched, {})[str(workers)] = \
                 round(wall, 4)
+            bench["diverged"][sched][f"events_per_sec_{workers}"] = \
+                round(eps)
 
     look4 = bench["diverged"]["lookahead"]["4"]
     batch4 = bench["diverged"]["batch"]["4"]
+    serial1 = bench["diverged"]["serial"]["1"]
     speedup = batch4 / look4
     bench["speedup_lookahead_vs_batch_4w"] = round(speedup, 2)
+    # Same wall-ratio fields as BENCH_fabric.json's replay section: the
+    # scheduler's wall-clock overhead over serial on ITS best regime.
+    bench["wall_serial_s"] = serial1
+    bench["wall_lookahead4_s"] = look4
+    bench["wall_ratio_lookahead4_over_serial"] = round(look4 / serial1, 2)
     bench["bit_identical"] = True
     print(f"# all schedulers bit-identical to serial: True")
     print(f"# lookahead vs batch wall-clock at 4 workers: {speedup:.2f}x "
-          f"(paper Fig.8 range: 2.5-3.5x)")
+          f"(paper Fig.8 range: 2.5-3.5x); lookahead4/serial wall ratio "
+          f"{bench['wall_ratio_lookahead4_over_serial']:.2f}")
 
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     out = os.path.join(root, "BENCH_engine.json")
+    prior = {}
+    if os.path.exists(out):                 # merge-write: keep any keys
+        with open(out) as f:                # other tools have recorded
+            prior = json.load(f)
+    prior.update(bench)
     with open(out, "w") as f:
-        json.dump(bench, f, indent=2, sort_keys=True)
+        json.dump(prior, f, indent=2, sort_keys=True)
     print(f"# wrote {out}")
 
     # fabric backend x scheduler x worker count (bit-identity asserted).

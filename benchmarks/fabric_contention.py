@@ -30,6 +30,7 @@ workers is >= 1.5x with all schedulers bit-identical.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
@@ -91,8 +92,8 @@ def _tenant_ops(tid: int, rounds: int) -> tuple:
     return ops, list(devs)
 
 
-def _replay_run(scheduler, workers: int = 4, record: bool = False,
-                tenants: int = 4, rounds: int = 6):
+def _replay_once(scheduler, workers: int = 4, record: bool = False,
+                 tenants: int = 4, rounds: int = 6):
     sched = scheduler
     if record:
         sched = LookaheadScheduler(max_workers=workers)
@@ -102,36 +103,76 @@ def _replay_run(scheduler, workers: int = 4, record: bool = False,
     for tid in range(tenants):
         ops, devs = _tenant_ops(tid, rounds)
         system.load_trace(ops, devs)
-    t0 = time.time()
+    t0 = time.perf_counter()
     res = system.run()
-    wall = time.time() - t0
-    state = (res, system.fabric.link_utilization(), system.fabric.link_report())
+    wall = time.perf_counter() - t0
+    state = (res, system.fabric.link_utilization(),
+             system.fabric.link_report())
     return state, system.engine, wall
 
 
 def _architectural_speedup(round_groups, workers: int) -> float:
     """Critical-path events at `workers` cores vs total events, using the
-    pool's actual round-robin chunking of sorted cluster groups."""
+    pool's actual sticky cluster->worker assignment (worker = cluster id
+    mod workers).  ``round_groups`` holds per-round tuples of
+    (cluster id, events executed) pairs."""
     total = critical = 0
-    for sizes in round_groups:
-        total += sum(sizes)
-        n = min(workers, len(sizes))
-        critical += max(sum(sizes[i::n]) for i in range(n))
+    for groups in round_groups:
+        per_worker = [0] * workers
+        for gid, n in groups:
+            total += n
+            per_worker[gid % workers] += n
+        critical += max(per_worker)
     return total / max(1, critical)
 
 
-def replay_speedup(workers: int = 4) -> dict:
-    oracle, eng_s, wall_s = _replay_run("serial", workers=1)
-    rows = {"events": eng_s.events_processed, "workers": workers,
-            "wall_serial_s": round(wall_s, 4)}
+def replay_speedup(workers: int = 4, tenants: int = 4,
+                   rounds: int = 6, repeat: int = 16) -> dict:
+    """Wall clocks are the best of ``repeat`` *interleaved* repetitions
+    (serial, batch, lookahead round-robin): single-shot timings on a
+    small shared CI host swing 30%+ with neighbor noise, and
+    interleaving keeps a noise burst from biasing one scheduler's
+    number.  The wall *ratio* is the median of per-repetition ratios --
+    adjacent runs share their noise window, and a median of ratios is
+    robust to a quiet slice that only one scheduler's best-of happened
+    to catch (min/min is not).  Bit-identity against the serial oracle
+    is asserted on every repetition."""
+    names = ("serial", "batch", "lookahead")
+    best = {}
+    walls = {n: [] for n in names}
+    engines = {}
+    oracle = None
     identical = True
+    for _ in range(max(1, repeat)):
+        for sched in names:
+            w = 1 if sched == "serial" else workers
+            state, eng, wall = _replay_once(sched, workers=w,
+                                            tenants=tenants, rounds=rounds)
+            if oracle is None:
+                oracle = state
+            identical &= state == oracle
+            walls[sched].append(wall)
+            if sched not in best or wall < best[sched]:
+                best[sched] = wall
+            engines[sched] = eng
+    eng_s = engines["serial"]
+    rows = {"events": eng_s.events_processed, "workers": workers,
+            "wall_serial_s": round(best["serial"], 4),
+            "events_per_sec_serial": round(
+                eng_s.events_processed / best["serial"])}
     for sched in ("batch", "lookahead"):
-        state, eng, wall = _replay_run(sched, workers=workers)
-        identical &= state == oracle
-        rows[f"wall_{sched}{workers}_s"] = round(wall, 4)
+        eng = engines[sched]
+        rows[f"wall_{sched}{workers}_s"] = round(best[sched], 4)
+        rows[f"events_per_sec_{sched}{workers}"] = round(
+            eng.events_processed / best[sched])
         rows[f"rounds_{sched}"] = len(eng.window_widths
                                       or eng.batch_widths)
-    state, eng, _ = _replay_run("lookahead", workers=workers, record=True)
+    ratios = sorted(l / s for l, s in zip(walls["lookahead"],
+                                          walls["serial"]))
+    rows["wall_ratio_lookahead4_over_serial"] = round(
+        ratios[len(ratios) // 2], 2)
+    state, eng, _ = _replay_once("lookahead", workers=workers, record=True,
+                                 tenants=tenants, rounds=rounds)
     identical &= state == oracle
     rows["bit_identical"] = identical
     rows["clusters_busy_max"] = max(
@@ -157,7 +198,26 @@ def merge_bench(update: dict) -> str:
     return path
 
 
-def main() -> int:
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="perf smoke: replay section only, on a smaller "
+                         "trace; gates wall_lookahead4/wall_serial <= 1.3 "
+                         "(CI-lenient) and writes the 'replay_quick' "
+                         "BENCH section instead of 'replay'")
+    args = ap.parse_args(argv)
+
+    if args.quick:
+        replay = replay_speedup(tenants=3, rounds=3)
+        path = merge_bench({"replay_quick": replay})
+        ratio = replay["wall_ratio_lookahead4_over_serial"]
+        eps = replay["events_per_sec_serial"]
+        print(f"# replay (quick): {replay['events']} events, serial "
+              f"{eps} events/s, lookahead4/serial wall ratio {ratio:.2f} "
+              f"(bit_identical={replay['bit_identical']}); wrote {path}")
+        ok = replay["bit_identical"] and ratio is not None and ratio <= 1.3
+        return 0 if ok else 1
+
     print("name,analytic_us,event_us,ratio")
     ratios = {}
     for name, tenants in scenarios().items():
@@ -172,10 +232,14 @@ def main() -> int:
     replay = replay_speedup()
     path = merge_bench({"replay": replay})
     speedup = replay["speedup_lookahead_vs_serial_4w"]
-    print(f"# replay: {replay['events']} events, lookahead architectural "
-          f"speedup over serial at 4 workers: {speedup:.2f}x "
+    wall_ratio = replay["wall_ratio_lookahead4_over_serial"]
+    print(f"# replay: {replay['events']} events, serial "
+          f"{replay['events_per_sec_serial']} events/s, lookahead "
+          f"architectural speedup over serial at 4 workers: {speedup:.2f}x, "
+          f"lookahead4/serial wall ratio {wall_ratio:.2f} "
           f"(bit_identical={replay['bit_identical']}); wrote {path}")
-    ok = ok and replay["bit_identical"] and speedup >= 1.5
+    ok = (ok and replay["bit_identical"] and speedup >= 1.5
+          and wall_ratio is not None and wall_ratio <= 1.3)
     return 0 if ok else 1
 
 

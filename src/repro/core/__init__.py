@@ -5,7 +5,8 @@ hooks — plus the TPU adaptation layers: chip/topology/system models, the
 machine-level HLO analyzer (DP-1), the trace builder and the timeline
 simulator + roofline report the assignment's perf loop runs on.
 """
-from .event import Event, EventQueue, LocalQueue
+from .event import (Event, EventQueue, ShardedEventQueue, LocalQueue,
+                    EmptyQueueError)
 from .engine import (Engine, Scheduler, RoundScheduler, SCHEDULERS,
                      make_scheduler, register_scheduler, SerialScheduler,
                      BatchParallelScheduler, LookaheadScheduler)
@@ -26,7 +27,8 @@ from .roofline import (RooflineTerms, build_terms, collective_sim_time,
                        model_flops_decode, attention_flops, format_table)
 
 __all__ = [
-    "Event", "EventQueue", "LocalQueue", "Engine", "Scheduler",
+    "Event", "EventQueue", "ShardedEventQueue", "LocalQueue",
+    "EmptyQueueError", "Engine", "Scheduler",
     "RoundScheduler", "SCHEDULERS", "make_scheduler", "register_scheduler",
     "SerialScheduler", "BatchParallelScheduler", "LookaheadScheduler",
     "Component", "Port",

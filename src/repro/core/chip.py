@@ -49,7 +49,8 @@ class TensorCore(Component):
     def handle(self, event: Event) -> None:
         if event.kind == "request":
             job: ComputeJob = event.payload.payload
-            start = max(self.engine.now, self.busy_until_ps)
+            now = event.time               # == engine.now inside a handler
+            start = max(now, self.busy_until_ps)
             end = start + self.duration_ps(job)
             self.busy_until_ps = end
             self.total_flops += job.flops
@@ -59,7 +60,7 @@ class TensorCore(Component):
                 self.port("hbm").send(Request(
                     src=self.port("hbm"), dst=None, kind="traffic",
                     size_bytes=int(job.hbm_bytes)))
-            self.schedule("job_done", end - self.engine.now, payload=job)
+            self.schedule("job_done", end - now, payload=job)
         elif event.kind == "job_done":
             job: ComputeJob = event.payload
             self.port("prog").send(Request(
@@ -80,7 +81,7 @@ class HbmController(Component):
         if event.kind == "request":
             req: Request = event.payload
             self.bytes_total += req.size_bytes
-            start = max(self.engine.now, self.busy_until_ps)
+            start = max(event.time, self.busy_until_ps)
             end = start + s_to_ps(req.size_bytes / self.spec.hbm_bandwidth)
             self.busy_until_ps = end
             self.mark_busy(start, end, "hbm")

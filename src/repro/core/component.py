@@ -39,25 +39,39 @@ class Port:
         return self.connection is not None and self.connection.can_accept(self)
 
 
-class Component(Hookable):
+class Registered:
+    """Contract of an engine-registered item (components *and*
+    connections).  These attributes live at class level so every
+    registered item is *guaranteed* to carry them -- the engine hot path
+    reads ``rank``/``cluster_id``/``fault_failed`` with plain attribute
+    access, no getattr fallbacks -- while hook-free, fault-free
+    instances pay no per-instance storage.  Any new registrable type
+    must mix this in (``Engine.register`` writes ``engine``/``rank``;
+    ``Engine.compute_clusters`` writes ``cluster_id``)."""
+
+    engine = None               # set by Engine.register
+    rank = 0                    # set by Engine.register (deterministic)
+    cluster_id = 0              # set by Engine.compute_clusters: the
+                                # sequential-execution group (and event-queue
+                                # shard) a windowed scheduler assigns this
+                                # item to
+    cluster_affinity = None     # optional group key: items sharing a
+                                # non-None affinity are fused into one
+                                # cluster even without a fusing connection
+                                # (subsystems declare their own sequential
+                                # islands, e.g. the event fabric's chip
+                                # DMA + links)
+    # Fault-injection inputs (written by FaultInjector hook, read by the
+    # item's own handler / the engine dispatch):
+    fault_failed = False
+    fault_slow_factor = 1.0
+
+
+class Component(Registered, Hookable):
     def __init__(self, name: str) -> None:
         super().__init__()
         self.name = name
-        self.engine = None          # set by Engine.register
-        self.rank = 0               # set by Engine.register (deterministic)
-        self.cluster_id = 0         # set by Engine.compute_clusters: the
-                                    # sequential-execution group a windowed
-                                    # scheduler assigns this component to
-        self.cluster_affinity = None  # optional group key: components
-                                    # sharing a non-None affinity are fused
-                                    # into one cluster even without a
-                                    # fusing connection (subsystems declare
-                                    # their own sequential islands, e.g.
-                                    # the event fabric's chip DMA + links)
         self.ports: dict = {}
-        # Fault-injection inputs (written by FaultInjector hook, read here):
-        self.fault_failed = False
-        self.fault_slow_factor = 1.0
 
     # -- wiring -----------------------------------------------------------
     def port(self, name: str) -> Port:
@@ -86,9 +100,13 @@ class Component(Hookable):
     # -- convenience --------------------------------------------------------
     def mark_busy(self, start_ps: int, end_ps: int, tag: str) -> None:
         """Report a busy interval to hooks (metrics / utilization)."""
-        self.invoke_hooks("busy_interval", end_ps, (self, start_ps, end_ps, tag))
-        if self.engine is not None:
-            self.engine.invoke_hooks("busy_interval", end_ps, (self, start_ps, end_ps, tag))
+        if self.hooks_active:
+            self.invoke_hooks("busy_interval", end_ps,
+                              (self, start_ps, end_ps, tag))
+        eng = self.engine
+        if eng is not None and eng.hooks_active:
+            eng.invoke_hooks("busy_interval", end_ps,
+                             (self, start_ps, end_ps, tag))
 
     def __repr__(self) -> str:  # pragma: no cover
         return f"<{type(self).__name__} {self.name}>"

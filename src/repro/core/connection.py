@@ -18,32 +18,45 @@ rejected sender, notifying it via ``notify_available`` when space frees
 """
 from __future__ import annotations
 
-import dataclasses
 import typing
 
+from .component import Registered
 from .event import Event
 from .hooks import Hookable, REQ_SEND, REQ_DELIVER
 from .hw import s_to_ps
 
 
-@dataclasses.dataclass
 class Request:
-    src: typing.Any            # Port
-    dst: typing.Any            # Component (resolved by the connection)
-    kind: str
-    size_bytes: int = 0
-    payload: typing.Any = None
+    """One message on a connection.  ``__slots__`` class: requests are
+    the densest allocation after events themselves (every transfer, ack
+    and chunk on the event fabric is one), so they carry no dict."""
+
+    __slots__ = ("src", "dst", "kind", "size_bytes", "payload")
+
+    def __init__(self, src: typing.Any = None, dst: typing.Any = None,
+                 kind: str = "", size_bytes: int = 0,
+                 payload: typing.Any = None) -> None:
+        self.src = src             # Port
+        self.dst = dst             # Component (resolved by the connection)
+        self.kind = kind
+        self.size_bytes = size_bytes
+        self.payload = payload
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"Request({self.kind}, {self.size_bytes}B)"
 
 
-class Connection(Hookable):
-    """Point/multi-point transport with fixed latency (on-chip fabric)."""
+class Connection(Registered, Hookable):
+    """Point/multi-point transport with fixed latency (on-chip fabric).
+
+    Connections are engine-registered items like components (the
+    :class:`~repro.core.component.Registered` contract guarantees the
+    rank / cluster / fault attributes the engine hot path reads)."""
 
     def __init__(self, name: str, latency_s: float = 0.0) -> None:
         super().__init__()
         self.name = name
         self.latency_ps = s_to_ps(latency_s)
-        self.engine = None
-        self.rank = 0
         self.endpoints: list = []
 
     # -- wiring -------------------------------------------------------------
@@ -66,7 +79,7 @@ class Connection(Hookable):
         scheduler must fuse this connection with its endpoint owners into
         one sequential cluster.  A plain connection's send only posts
         events -- unless hooks are attached, which observe send order."""
-        return bool(self._hooks)
+        return self.hooks_active
 
     # -- protocol -----------------------------------------------------------
     def can_accept(self, src_port) -> bool:
@@ -98,7 +111,7 @@ class Connection(Hookable):
         is skipped, halving the event volume on busy transports like the
         event fabric's bus.  (``LimitedConnection`` overrides this: its
         deliver event is load-bearing slot bookkeeping.)"""
-        if self._hooks:
+        if self.hooks_active:
             self.engine.post(Event(time=arrival_ps, component=self,
                                    kind="deliver", payload=request))
         self.engine.post(Event(time=arrival_ps, component=request.dst,
@@ -106,7 +119,8 @@ class Connection(Hookable):
 
     def send(self, src_port, request: Request) -> bool:
         self._resolve_dst(src_port, request)
-        self.invoke_hooks(REQ_SEND, self.engine.now, request)
+        if self.hooks_active:
+            self.invoke_hooks(REQ_SEND, self.engine.now, request)
         self._post_transfer(request,
                             self.engine.now + self.transfer_time_ps(request))
         return True
@@ -150,7 +164,8 @@ class LinkConnection(Connection):
 
     def send(self, src_port, request: Request) -> bool:
         self._resolve_dst(src_port, request)
-        self.invoke_hooks(REQ_SEND, self.engine.now, request)
+        if self.hooks_active:
+            self.invoke_hooks(REQ_SEND, self.engine.now, request)
         start = max(self.engine.now, self.busy_until_ps)
         done = start + self.serialization_ps(request.size_bytes)
         self.busy_until_ps = done
@@ -207,8 +222,9 @@ class LimitedConnection(LinkConnection):
         if event.kind == "deliver":
             request: Request = event.payload
             self.in_flight -= 1
-            self.invoke_hooks(REQ_DELIVER, self.engine.now, request)
-            self.engine.post(Event(time=self.engine.now,
+            if self.hooks_active:
+                self.invoke_hooks(REQ_DELIVER, event.time, request)
+            self.engine.post(Event(time=event.time,
                                    component=request.dst, kind="request",
                                    payload=request))
             # wake exactly one waiter per freed slot, deterministically

@@ -24,15 +24,56 @@ through a thread-local sink owned by the worker's own group context --
 no shared mutable state.  Posts from *foreign* threads (or outside a
 round) fall back to the global queue under ``_post_lock``; engine-level
 hooks always fire under ``_hook_lock``.
+
+Hot-path design (the allocation-lean event core):
+
+* Events are ``__slots__`` objects stamped in place -- no
+  ``dataclasses.replace`` copy per push.
+* Registered items are guaranteed to carry ``rank`` / ``cluster_id`` /
+  ``fault_failed`` (class-level defaults on Component/Connection), so
+  dispatch reads plain attributes, never ``getattr`` fallbacks.
+* Hook dispatch is gated on the cached ``hooks_active`` flag: a
+  hook-free event pays one predicate check instead of four
+  ``invoke_hooks`` calls.
+* Round schedulers swap the engine's queue for a
+  :class:`~repro.core.event.ShardedEventQueue` (one shard per cluster):
+  windows pop per shard, already partitioned and sorted, and the commit
+  phase routes posts per destination shard -- only *cross-cluster*
+  traffic is ever merged, and then only with the posts of that one
+  shard (see the seq-locality argument on ``ShardedEventQueue``).
+* Per-cluster :class:`_GroupCtx` objects and the worker pool live for
+  the whole ``run`` (reset, not reallocated, each round), with sticky
+  ``cluster_id % max_workers`` worker assignment.
 """
 from __future__ import annotations
 
 import concurrent.futures
 import threading
 import typing
+import warnings
 
-from ..event import Event, EventQueue, LocalQueue
+from heapq import heappop as _heappop
+
+from ..event import Event, EventQueue, LocalQueue, ShardedEventQueue
 from ..hooks import Hookable, EVENT_START, EVENT_END
+
+
+def guarded_push(engine: "Engine", queue) -> typing.Callable:
+    """A post sink that pushes straight onto ``queue`` (no foreign-post
+    lock -- the caller's thread owns the run) while keeping the
+    "cannot schedule into the past" causality assert.  Reads the clock
+    through the thread-local directly, skipping the ``Engine.now``
+    property on the hot path."""
+    tls = engine._tls
+    push = queue.push
+
+    def sink(event: Event) -> None:
+        t = getattr(tls, "now", None)
+        assert event.time >= (engine._now_global if t is None else t), \
+            "cannot schedule into the past"
+        push(event)
+
+    return sink
 
 
 # -- scheduler interface + registry -----------------------------------------
@@ -88,6 +129,11 @@ class Engine(Hookable):
     def __init__(self, parallel: bool = False, max_workers: int = 4,
                  scheduler=None) -> None:
         super().__init__()
+        if parallel:
+            warnings.warn(
+                "Engine(parallel=True) is deprecated; pass "
+                "scheduler='batch' (or 'lookahead') instead",
+                DeprecationWarning, stacklevel=2)
         self.queue = EventQueue()
         self._now_global = 0
         self._tls = threading.local()
@@ -99,11 +145,11 @@ class Engine(Hookable):
         self.events_processed = 0
         self.batch_widths: list = []        # events per execution round
         self.window_widths: list = []       # filled by windowed schedulers
-        self.round_group_sizes: list = []   # per-round events per cluster
-                                            # (only when the scheduler sets
-                                            # record_group_sizes; feeds the
-                                            # architectural-speedup model in
-                                            # benchmarks/fabric_contention)
+        self.round_group_sizes: list = []   # per-round (cluster, events)
+                                            # pairs (only when the scheduler
+                                            # sets record_group_sizes; feeds
+                                            # the architectural-speedup model
+                                            # in benchmarks/fabric_contention)
         if scheduler is None:
             scheduler = "batch" if parallel else "serial"
         self.scheduler = make_scheduler(scheduler,
@@ -127,7 +173,12 @@ class Engine(Hookable):
 
     # -- registration ---------------------------------------------------------
     def register(self, item) -> typing.Any:
-        """Register a component or connection; assigns deterministic rank."""
+        """Register a component or connection; assigns deterministic rank.
+
+        Every registered item is guaranteed a ``rank`` (and a
+        ``cluster_id`` once a windowed scheduler runs), so queue and
+        dispatch code reads them as plain attributes.
+        """
         item.engine = self
         item.rank = len(self._components)
         self._components.append(item)
@@ -135,46 +186,68 @@ class Engine(Hookable):
 
     # -- scheduling ------------------------------------------------------------
     def post(self, event: Event) -> None:
-        assert event.time >= self.now, "cannot schedule into the past"
+        # Sink paths guard against past-time posts themselves (the group
+        # contexts assert against the executing event's timestamp), so
+        # the hot path pays no ``self.now`` read per post.
         sink = getattr(self._tls, "sink", None)
         if sink is not None:
             sink(event)                     # this worker's own group context
         else:
+            assert event.time >= self.now, "cannot schedule into the past"
             with self._post_lock:           # foreign thread / outside a round
                 self.queue.push(event)
 
     # -- hooks ------------------------------------------------------------------
     def invoke_hooks(self, position: str, time: int, item) -> None:
         """Engine-level hooks are shared across worker threads -> locked."""
-        if not self._hooks:
+        if not self.hooks_active:
             return
         with self._hook_lock:
-            super().invoke_hooks(position, time, item)
+            Hookable.invoke_hooks(self, position, time, item)
 
     # -- execution ----------------------------------------------------------------
     def _handle_one(self, event: Event) -> None:
-        """Run one event's handler with the clock pinned to its timestamp."""
+        """Run one event's handler with the clock pinned to its timestamp.
+
+        The hook-free fast path (the overwhelmingly common case) is a
+        single flag check; any attached hook -- engine- or
+        component-level -- routes through the original four-position
+        dispatch so tracers and fault injectors observe every event.
+        """
         comp = event.component
-        prev = getattr(self._tls, "now", None)
-        self._tls.now = event.time
+        tls = self._tls
+        prev = getattr(tls, "now", None)
+        tls.now = event.time
         try:
-            self.invoke_hooks(EVENT_START, event.time, event)
-            comp.invoke_hooks(EVENT_START, event.time, event)
-            if not getattr(comp, "fault_failed", False):
-                if event.kind == "notify_available":
+            if self.hooks_active or comp.hooks_active:
+                self._handle_hooked(event, comp)
+            elif not comp.fault_failed:
+                if event.kind != "notify_available":
+                    comp.handle(event)
+                else:
                     # DP-6 wake posted by a capacity-limited connection;
                     # dispatched to the dedicated callback so components
                     # need not pattern-match it inside handle().
                     comp.notify_available(event.payload)
-                else:
-                    comp.handle(event)
             elif event.kind == "notify_available":
                 # the waiter died holding a slot reservation: hand it back
                 event.payload.reclaim(comp)
-            comp.invoke_hooks(EVENT_END, event.time, event)
-            self.invoke_hooks(EVENT_END, event.time, event)
         finally:
-            self._tls.now = prev
+            tls.now = prev
+
+    def _handle_hooked(self, event: Event, comp) -> None:
+        """Slow path: at least one hook observes this event."""
+        self.invoke_hooks(EVENT_START, event.time, event)
+        comp.invoke_hooks(EVENT_START, event.time, event)
+        if not comp.fault_failed:
+            if event.kind == "notify_available":
+                comp.notify_available(event.payload)
+            else:
+                comp.handle(event)
+        elif event.kind == "notify_available":
+            event.payload.reclaim(comp)
+        comp.invoke_hooks(EVENT_END, event.time, event)
+        self.invoke_hooks(EVENT_END, event.time, event)
 
     def run(self, until_ps: int = None) -> int:
         """Drain the queue (or run past ``until_ps``) via the scheduler."""
@@ -205,7 +278,7 @@ class Engine(Hookable):
         safe, only slower).
 
         Returns cluster id per rank and annotates each registered item
-        with ``item.cluster_id``.
+        with ``item.cluster_id`` (also its event-queue shard).
         """
         n = len(self._components)
         parent = list(range(n))
@@ -224,7 +297,7 @@ class Engine(Hookable):
         self._fused_connections: set = set()
         affinity_root: dict = {}
         for item in self._components:
-            aff = getattr(item, "cluster_affinity", None)
+            aff = item.cluster_affinity
             if aff is not None:
                 union(affinity_root.setdefault(aff, item.rank), item.rank)
             endpoints = getattr(item, "endpoints", None)
@@ -270,92 +343,169 @@ class Engine(Hookable):
 # -- shared round machinery ---------------------------------------------------
 
 class _GroupCtx:
-    """One group's execution context for a single round.
+    """One cluster's execution context, reused across every round.
 
-    Owns a local heap (the group's slice of the window plus events its
+    Owns a local heap (the cluster's slice of the window plus events its
     handlers push back into it) and a post log whose stamps reproduce the
     order a serial engine would have posted in: (executing event's time,
     snapshot generation, rank, seq, intra-handler index) -- generation
     first among same-time events because serial runs a full snapshot
     round across *all* ranks before any of that round's delay-0 posts.
     Group execution is single-threaded, so none of this needs locks.
+
+    The context is long-lived (allocated once per cluster in
+    ``RoundScheduler.prepare``): :meth:`begin` resets it for a round by
+    adopting the cluster's shard slice wholesale.
     """
 
     __slots__ = ("sched", "group_id", "window_end", "local", "posts",
-                 "executed", "max_time", "_exec_key", "_exec_gen",
-                 "_post_idx")
+                 "executed", "max_time", "_adopted", "_entry", "_post_idx",
+                 "_defer", "_strict")
 
-    def __init__(self, sched: "RoundScheduler", group_id: int,
-                 window_end) -> None:
+    _IDLE_ENTRY = (0, 0, 0, 0, None)
+
+    def __init__(self, sched: "RoundScheduler", group_id: int) -> None:
         self.sched = sched
         self.group_id = group_id
-        self.window_end = window_end
-        self.local = LocalQueue()
-        self.posts: list = []               # (stamp, event)
+        self.window_end = 0
+        self.local = LocalQueue()           # in-window posts only (side heap)
+        self.posts: list = []               # (entry stamp, idx, event)
         self.executed = 0
         self.max_time = 0
-        self._exec_key = (0, 0, 0)
-        self._exec_gen = 0
+        self._adopted: list = []            # this round's shard slice
+        self._entry = self._IDLE_ENTRY      # executing event's heap entry
+        self._post_idx = 0
+        self._defer = sched.defer_all_posts
+        self._strict = sched.strict_window
+
+    def begin(self, window_end, entries: list) -> None:
+        """Reset for a new round, adopting the cluster's popped shard
+        slice (ascending (time, gen, rank, seq, event) entries).  The
+        slice is *iterated in place* during :meth:`execute`; only events
+        handlers push back into the window go through the side heap, so
+        the common no-local-post round re-pops nothing.
+
+        ``_post_idx`` resets per round, not per event: the commit stamp
+        (entry, idx) only ever tie-breaks posts of the *same* executing
+        event, so any monotonic idx sequence within the round works.
+        """
+        self.window_end = window_end
+        self._adopted = entries
+        self.local.clear()
+        self.max_time = 0
         self._post_idx = 0
 
     def post(self, event: Event) -> None:
-        time, rank, seq = self._exec_key
-        stamp = (time, self._exec_gen, rank, seq, self._post_idx)
-        self._post_idx += 1
-        if (not self.sched.defer_all_posts
-                and self.sched.group_of(event.component) == self.group_id
-                and event.time < self.window_end):
-            # Same-timestamp posts inherit creator generation + 1 so they
-            # wait for the next snapshot round, like serial; later
-            # timestamps start fresh at generation 0.
-            gen = self._exec_gen + 1 if event.time == time else 0
-            self.local.push_new(event, generation=gen)
-        else:
-            if (self.sched.strict_window
-                    and event.time < self.window_end
-                    and self.sched.group_of(event.component) != self.group_id):
+        assert event.time >= self._entry[0], "cannot schedule into the past"
+        idx = self._post_idx
+        self._post_idx = idx + 1
+        if event.time < self.window_end:    # in-window: local or unsafe
+            if (not self._defer
+                    and event.component.cluster_id == self.group_id):
+                # Same-timestamp posts inherit creator generation + 1 so
+                # they wait for the next snapshot round, like serial;
+                # later timestamps start fresh at generation 0.  No stamp
+                # needed: local events never reach the commit phase.
+                e = self._entry
+                self.local.push_new(
+                    event, generation=e[1] + 1 if event.time == e[0] else 0)
+                return
+            if (self._strict
+                    and event.component.cluster_id != self.group_id):
                 raise RuntimeError(
                     f"lookahead safety violation: {event!r} targets another "
                     f"cluster inside the window ending at {self.window_end}; "
                     "route cross-component traffic through a Connection with "
                     "latency >= the engine's lookahead window")
-            self.posts.append((stamp, event))
+        # The executing event's heap entry doubles as the post stamp:
+        # (entry, idx) sorts exactly like the serial post order
+        # (time, gen, rank, seq, intra-handler index), and the tuple
+        # comparison can never reach the entry's event field because
+        # seqs are unique -- zero allocations beyond the triple.
+        self.posts.append((self._entry, idx, event))
 
     def execute(self) -> "_GroupCtx":
+        """Drain the round: a two-stream merge of the adopted slice
+        (iterated by index -- it is already sorted) against the
+        side heap of events handlers push back into the window.  The
+        stream pick compares raw entry tuples; local seqs live above
+        ``LOCAL_SEQ_BASE`` so the comparison never reaches the event.
+
+        Event dispatch is inlined (the body of ``Engine._handle_one``)
+        with the thread-local clock and sink managed once per round
+        instead of once per event -- with ~2-3 events per cluster per
+        round, the per-activation wrappers would otherwise rival the
+        handlers themselves.
+        """
         eng = self.sched.engine
         tls = eng._tls
         prev_sink = getattr(tls, "sink", None)
+        prev_now = getattr(tls, "now", None)
         tls.sink = self.post
+        hooked = eng._handle_hooked
+        adopted = self._adopted
+        n_adopted = len(adopted)
+        side = self.local._heap
+        pop = _heappop
+        entry = None
+        i = 0
+        n = 0
         try:
-            while self.local:
-                gen, ev = self.local.pop()
-                self._exec_key = (ev.time, getattr(ev.component, "rank", 0),
-                                  ev.seq)
-                self._exec_gen = gen
-                self._post_idx = 0
-                eng._handle_one(ev)
-                self.executed += 1
-                self.max_time = ev.time     # heap order => non-decreasing
+            while True:
+                if side:
+                    if i < n_adopted and adopted[i] < side[0]:
+                        entry = adopted[i]
+                        i += 1
+                    else:
+                        entry = pop(side)
+                elif i < n_adopted:
+                    entry = adopted[i]
+                    i += 1
+                else:
+                    break
+                self._entry = entry
+                ev = entry[4]
+                comp = ev.component
+                tls.now = entry[0]
+                # eng.hooks_active is re-read per event (not hoisted):
+                # a handler may attach an engine hook mid-round, and
+                # serial would observe the remaining events with it
+                if eng.hooks_active or comp.hooks_active:
+                    hooked(ev, comp)
+                elif not comp.fault_failed:
+                    if ev.kind != "notify_available":
+                        comp.handle(ev)
+                    else:
+                        comp.notify_available(ev.payload)
+                elif ev.kind == "notify_available":
+                    ev.payload.reclaim(comp)
+                n += 1
         finally:
+            self.executed = n
+            if n:
+                self.max_time = entry[0]    # merge order => the maximum
             tls.sink = prev_sink
+            tls.now = prev_now
         return self
 
 
 class RoundScheduler(Scheduler):
-    """Round-based executor: pop a window, run groups, commit posts.
+    """Round-based executor: pop a window per shard, run groups, commit.
 
-    Subclasses choose the window width (:meth:`window_end`) and the
-    grouping (:meth:`group_of`); ``use_pool`` turns on the worker pool.
-    The commit phase pushes newly created events in serial post order
-    (stamp order), so the global seqs -- and therefore all same-(time,
-    rank) tie-breaks -- are identical to serial execution.
+    Grouping is always by engine cluster (``compute_clusters``; the
+    event queue is sharded the same way), so a cluster's window slice
+    pops straight out of its own shard.  Subclasses choose the window
+    width (:meth:`window_end`); ``use_pool`` turns on the worker pool.
+    The commit phase pushes newly created events per destination shard
+    in serial post order (stamp order), so all same-(time, rank)
+    tie-breaks -- the only place seq is ever consulted -- are identical
+    to serial execution.
     """
 
     use_pool = False
     strict_window = False
     record_window_widths = False
-    # Record per-round events-per-cluster tuples (sorted by cluster id,
-    # the same order the pool chunks tasks in) into
+    # Record per-round (cluster id, events) pairs into
     # ``engine.round_group_sizes`` -- the input to the architectural
     # (critical-path) speedup model benchmarks report.  Off by default:
     # long runs would accumulate one tuple per round.
@@ -368,84 +518,205 @@ class RoundScheduler(Scheduler):
     # schedulers instead fuse zero-latency connections into the target's
     # cluster, which keeps in-window local execution serial-ordered.
     defer_all_posts = True
+    # Rounds smaller than this run inline on the scheduler thread: pool
+    # dispatch costs a fixed ~100us per round, so scattering a dozen
+    # events across workers is pure overhead (and under CPython's GIL,
+    # pure-Python handlers gain nothing physical from the pool anyway).
+    # The pool engages only when a round is wide enough to amortize the
+    # dispatch -- the regime where GIL-releasing handlers /
+    # free-threaded builds actually scale.
+    pool_min_events = 256
 
     def window_end(self, t: int):
         return t + 1                        # one integer-ps tick
 
     def group_of(self, component) -> int:
-        return getattr(component, "rank", 0)
+        """The sequential-execution group (== queue shard) of a
+        component.  Always its engine cluster."""
+        return component.cluster_id
 
     def prepare(self) -> None:
-        """Called once per ``run`` before the first round."""
+        """Called once per ``run``: derive clusters, shard the queue and
+        build the persistent per-cluster contexts + worker buckets."""
+        eng = self.engine
+        self._cluster_of = eng.compute_clusters()
+        nshards = max(1, (max(self._cluster_of) + 1) if self._cluster_of
+                      else 1)
+        eng.queue = ShardedEventQueue.from_queue(eng.queue, nshards)
+        self._ctxs = [_GroupCtx(self, gid) for gid in range(nshards)]
+        self._merged = _MergedCtx(self, -1)
+        self._merged.push_global = eng.queue.push
+        self._commit: list = []             # reused per-round post buffer
+        self._buckets = [[] for _ in range(max(1, self.max_workers))]
 
     def run(self, until_ps: int = None) -> int:
         eng = self.engine
         self.prepare()
+        queue = eng.queue
+        ctxs = self._ctxs
+        commit = self._commit
+        buckets = self._buckets
+        nworkers = self.max_workers
+        pool_ok = self.use_pool and nworkers > 1
+        pool_min = self.pool_min_events
+        record_widths = self.record_window_widths
+        record_groups = self.record_group_sizes
+        tls = eng._tls
+        serial_sink = guarded_push(eng, queue)
         pool = None
+        # Execution-mode predictor: rounds narrower than pool_min_events
+        # run serial-equivalent (merged / degenerate), wider rounds run
+        # grouped on the pool.  The mode must be chosen before the pop,
+        # so the previous round's width predicts the next -- safe because
+        # BOTH modes are bit-exact; a mispredict only costs speed, and
+        # the predictor corrects itself on the very next round.
+        prefer_merged = pool_min > 1 and not record_groups
         try:
-            while eng.queue:
-                t = eng.queue.peek_time()
+            while queue:
+                t = queue.peek_time()
                 if until_ps is not None and t > until_ps:
                     break
                 eng.now = t
                 wend = self.window_end(t)
                 if until_ps is not None:
                     wend = min(wend, until_ps + 1)
-                events = eng.queue.pop_window(wend)
 
-                if len(events) == 1 and not self.strict_window:
-                    # Degenerate round: no concurrency to set up.  With no
-                    # sink installed, posts push straight onto the global
-                    # queue in post order -- exactly serial semantics.
-                    # Strict schedulers skip this path so the unsafe-post
-                    # guard fires regardless of event density.
-                    ev = events[0]
-                    eng._handle_one(ev)
-                    eng.events_processed += 1
-                    eng.batch_widths.append(1)
-                    if self.record_window_widths:
-                        eng.window_widths.append(1)
-                    eng.now = ev.time
+                if prefer_merged:
+                    merged = queue.pop_window_merged(wend)
+                    nev = len(merged)
+                    prefer_merged = nev < pool_min
+                    if nev == 1:
+                        # Degenerate: the sink pushes posts straight onto
+                        # the (sharded) global queue in post order --
+                        # exactly serial semantics.
+                        ev = merged[0][4]
+                        prev_sink = getattr(tls, "sink", None)
+                        tls.sink = serial_sink
+                        try:
+                            eng._handle_one(ev)
+                        finally:
+                            tls.sink = prev_sink
+                        eng.events_processed += 1
+                        eng.batch_widths.append(1)
+                        if record_widths:
+                            eng.window_widths.append(1)
+                        eng.now = ev.time
+                        continue
+                    # Merged round: ONE group spanning every cluster --
+                    # the machinery's base case, serial-equivalent by
+                    # construction (see _MergedCtx); beyond-window posts
+                    # push themselves straight onto the sharded queue.
+                    ctx = self._merged
+                    ctx.begin(wend, merged)
+                    ctx.execute()
+                    eng.events_processed += ctx.executed
+                    eng.batch_widths.append(ctx.executed)
+                    if record_widths:
+                        eng.window_widths.append(ctx.executed)
+                    eng.now = ctx.max_time if ctx.max_time > t else t
                     continue
 
-                groups: dict = {}
-                for ev in events:
-                    gid = self.group_of(ev.component)
-                    groups.setdefault(gid, _GroupCtx(self, gid, wend)) \
-                          .local.adopt(ev)
-                tasks = [groups[g] for g in sorted(groups)]
+                popped, nev = queue.pop_window_sharded(wend)
+                prefer_merged = nev < pool_min and not record_groups
 
-                if self.use_pool and len(tasks) > 1 and self.max_workers > 1:
+                tasks = []
+                for sid, entries in popped:
+                    ctx = ctxs[sid]
+                    ctx.begin(wend, entries)
+                    tasks.append(ctx)
+
+                if pool_ok and len(tasks) > 1:
                     if pool is None:
                         pool = concurrent.futures.ThreadPoolExecutor(
-                            self.max_workers)
-                    nchunk = min(self.max_workers, len(tasks))
-                    chunks = [tasks[i::nchunk] for i in range(nchunk)]
-                    list(pool.map(_run_chunk, chunks))
+                            nworkers)
+                    for b in buckets:
+                        b.clear()
+                    for ctx in tasks:       # sticky cluster -> worker
+                        buckets[ctx.group_id % nworkers].append(ctx)
+                    list(pool.map(_run_chunk,
+                                  [b for b in buckets if b]))
                 else:
                     for ctx in tasks:
                         ctx.execute()
 
-                executed = sum(ctx.executed for ctx in tasks)
+                executed = 0
+                tmax = t
+                for ctx in tasks:
+                    executed += ctx.executed
+                    if ctx.max_time > tmax:
+                        tmax = ctx.max_time
                 eng.events_processed += executed
                 eng.batch_widths.append(executed)
-                if self.record_window_widths:
+                if record_widths:
                     eng.window_widths.append(executed)
-                if self.record_group_sizes:
+                if record_groups:
                     eng.round_group_sizes.append(
-                        tuple(ctx.executed for ctx in tasks))
+                        tuple((ctx.group_id, ctx.executed)
+                              for ctx in tasks))
 
-                posts: list = []
+                # Commit: push this round's posts in serial post (stamp)
+                # order.  Each context's log is already stamp-sorted (its
+                # execution is sequential), so the combined commit is
+                # C-level bulk work: extend the runs together, one
+                # near-linear Timsort merge, then push -- ``queue.push``
+                # routes each event to its cluster's shard, where the
+                # stamp order becomes the same-(time, rank) seq order
+                # serial would have produced.  With a single contributing
+                # context the sort is skipped outright.
+                sources = 0
                 for ctx in tasks:
-                    posts.extend(ctx.posts)
-                posts.sort(key=lambda se: se[0])
-                for _, ev in posts:
-                    eng.queue.push(ev)
-                eng.now = max([t] + [ctx.max_time for ctx in tasks])
+                    if ctx.posts:
+                        sources += 1
+                        commit.extend(ctx.posts)
+                        ctx.posts.clear()
+                if commit:
+                    if sources > 1:
+                        # (entry, idx, event) triples sort by entry then
+                        # idx -- the serial post order; seq uniqueness
+                        # means the comparison never reaches the event
+                        commit.sort()
+                    push = queue.push
+                    for p in commit:
+                        push(p[2])
+                    commit.clear()
+                eng.now = tmax
         finally:
             if pool is not None:
                 pool.shutdown()
         return eng.now
+
+
+class _MergedCtx(_GroupCtx):
+    """Whole-window context for rounds too narrow to pay for grouping.
+
+    One group containing *every* cluster is the base case of the round
+    machinery: all in-window posts are same-group, so the LocalQueue's
+    generation bookkeeping reproduces serial's snapshot rounds exactly
+    and no cross-group commit-order hazard exists -- execution is
+    serial-equivalent by construction.  Because a single group's
+    execution order *is* the serial post order, beyond-window posts
+    skip the commit log entirely and push straight onto the sharded
+    queue -- seq assignment at post time equals what a stamp-ordered
+    commit would produce.  The unsafe-post guard is structural here:
+    with nothing running concurrently there is no determinism to
+    corrupt (set ``pool_min_events = 0`` to force grouped execution
+    when the diagnostic guard itself is wanted).
+    """
+
+    __slots__ = ("push_global",)
+
+    def __init__(self, sched: "RoundScheduler", group_id: int) -> None:
+        super().__init__(sched, group_id)
+        self.push_global = None             # bound queue.push, set by prepare
+
+    def post(self, event: Event) -> None:
+        e = self._entry
+        assert event.time >= e[0], "cannot schedule into the past"
+        if event.time < self.window_end:
+            self.local.push_new(
+                event, generation=e[1] + 1 if event.time == e[0] else 0)
+        else:
+            self.push_global(event)
 
 
 def _run_chunk(chunk) -> None:

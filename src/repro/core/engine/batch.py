@@ -6,11 +6,11 @@ thread pool (a cluster's state is only touched by its own group).
 Newly created events all commit afterwards in serial post order, so the
 result is bit-identical to serial execution.
 
-Grouping is by ``Engine.compute_clusters`` rather than raw component
-rank: components sharing a stateful connection (``LinkConnection``
-occupancy, attached hooks) mutate that connection's state from inside
-their handlers, so they must not run on different threads even at the
-same timestamp.
+Grouping is by ``Engine.compute_clusters`` (the ``RoundScheduler``
+default) rather than raw component rank: components sharing a stateful
+connection (``LinkConnection`` occupancy, attached hooks) mutate that
+connection's state from inside their handlers, so they must not run on
+different threads even at the same timestamp.
 
 Limitation this scheduler inherits from the paper's scheme: it only
 parallelizes *exact* timestamp ties.  Traces whose per-component op
@@ -27,16 +27,8 @@ class BatchParallelScheduler(RoundScheduler):
     use_pool = True
 
     # RoundScheduler defaults provide the rest of DP-5: one-tick windows
-    # (same-timestamp batches) with every post deferred to the commit.
-
-    def prepare(self) -> None:
-        self._cluster_of = self.engine.compute_clusters()
-
-    def group_of(self, component) -> int:
-        rank = getattr(component, "rank", 0)
-        if rank < len(self._cluster_of):
-            return self._cluster_of[rank]
-        return rank                         # unregistered: isolate it
+    # (same-timestamp batches) with every post deferred to the commit,
+    # per-cluster grouping, and the cluster-sharded event queue.
 
 
 register_scheduler("batch", BatchParallelScheduler)

@@ -48,7 +48,7 @@ class LookaheadScheduler(RoundScheduler):
         self.window_ps = None               # resolved at run() time
 
     def prepare(self) -> None:
-        self._cluster_of = self.engine.compute_clusters()
+        super().prepare()                   # clusters + sharded queue + ctxs
         if self.lookahead_ps is not None:
             self.window_ps = self.lookahead_ps
         else:
@@ -60,12 +60,6 @@ class LookaheadScheduler(RoundScheduler):
 
     def window_end(self, t: int):
         return _INF if self.window_ps is None else t + self.window_ps
-
-    def group_of(self, component) -> int:
-        rank = getattr(component, "rank", 0)
-        if rank < len(self._cluster_of):
-            return self._cluster_of[rank]
-        return rank                         # unregistered: isolate it
 
     def describe(self) -> dict:
         d = super().describe()

@@ -38,13 +38,24 @@ class Hook:
 
 
 class Hookable:
-    """Mixin giving engine/components/connections a hook list."""
+    """Mixin giving engine/components/connections a hook list.
+
+    ``hooks_active`` is the hot-path fast flag: hook-free items (the
+    overwhelmingly common case -- fault/trace hooks attach to a handful
+    of components) pay one attribute check per event instead of four
+    ``invoke_hooks`` calls.  It is a class attribute shadowed by an
+    instance attribute on the first ``accept_hook``, so the flag costs
+    nothing per instance until a hook actually attaches.
+    """
+
+    hooks_active = False
 
     def __init__(self) -> None:
         self._hooks: list = []
 
     def accept_hook(self, hook: Hook) -> None:
         self._hooks.append(hook)
+        self.hooks_active = True
 
     def invoke_hooks(self, position: str, time: int, item: typing.Any) -> None:
         for h in self._hooks:

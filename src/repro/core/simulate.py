@@ -93,8 +93,9 @@ def simulate(hlo_text: str = None, cost: HloCost = None,
     """Simulate one compiled step on the modeled machine.
 
     ``scheduler``: engine scheduler name ("serial" | "batch" |
-    "lookahead"); defaults to "batch" when ``parallel`` else "serial".
-    All schedulers produce bit-identical ``SimReport.summary()``s.
+    "lookahead"); defaults to "serial".  The legacy ``parallel=True``
+    knob maps to "batch" with a ``DeprecationWarning``.  All schedulers
+    produce bit-identical ``SimReport.summary()``s.
 
     ``fabric``: interconnect backend name ("analytic" | "event");
     defaults to ``spec.fabric``.  See docs/fabric.md.

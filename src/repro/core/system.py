@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import typing
+import warnings
 
 from .chip import HbmController, TensorCore
 from .component import Component
@@ -188,8 +189,14 @@ class System:
                  max_workers: int = 4, fabric=None) -> None:
         from ..fabric import make_fabric   # late: fabric imports core modules
         self.spec = spec
-        self.engine = Engine(parallel=parallel, scheduler=scheduler,
-                             max_workers=max_workers)
+        if parallel:
+            warnings.warn(
+                "System(parallel=True) is deprecated; pass "
+                "scheduler='batch' (or 'lookahead') instead",
+                DeprecationWarning, stacklevel=2)
+            if scheduler is None:
+                scheduler = "batch"
+        self.engine = Engine(scheduler=scheduler, max_workers=max_workers)
         self.fabric = make_fabric(fabric or spec.fabric, spec)
         self.topology = self.fabric.topology
         self.programs: typing.List[DeviceProgram] = []

@@ -128,19 +128,26 @@ def make_legs(topo) -> Legs:
     return Legs(exec_ps=q, xfer_ps=q, done_ps=q, floor_ps=q)
 
 
-@dataclasses.dataclass(frozen=True)
 class _Xmit:
     """Routing envelope for xfer / xfer_done / chunk requests on the
     fabric bus.  ``ack_ps`` is the connection latency of the returning
     ack AND of the forwarded neighbor chunk (computed by the issuing
     DMA from the step's latency budget); ``step`` tags which program
-    step a chunk belongs to at the consuming neighbor."""
-    link: str
-    chip: int
-    key: typing.Any
-    ack_ps: int = 0
-    dst_chip: typing.Optional[int] = None
-    step: int = 0
+    step a chunk belongs to at the consuming neighbor.  One ``_Xmit``
+    is allocated per transfer -- the densest payload on the fabric --
+    so it is a bare ``__slots__`` class."""
+
+    __slots__ = ("link", "chip", "key", "ack_ps", "dst_chip", "step")
+
+    def __init__(self, link: str, chip: int, key: typing.Any,
+                 ack_ps: int = 0, dst_chip: typing.Optional[int] = None,
+                 step: int = 0) -> None:
+        self.link = link
+        self.chip = chip
+        self.key = key
+        self.ack_ps = ack_ps
+        self.dst_chip = dst_chip
+        self.step = step
 
 
 def _dma_name(chip: int) -> str:
@@ -168,11 +175,13 @@ class FabricLink(Component):
         self.busy_until_ps = 0
         self.bytes_total = 0
         self.busy_ps = 0
+        self.bus = self.port("bus")         # cached: hot on every transfer
 
     def handle(self, event: Event) -> None:
+        now = event.time                    # == engine.now inside a handler
         if event.kind == "request":            # an xfer from a DMA engine
             req: Request = event.payload
-            start = max(self.engine.now, self.busy_until_ps)
+            start = max(now, self.busy_until_ps)
             dur = s_to_ps(req.size_bytes / self.bandwidth
                           * self.fault_slow_factor)
             end = start + dur
@@ -180,11 +189,10 @@ class FabricLink(Component):
             self.bytes_total += req.size_bytes
             self.busy_ps += dur
             self.mark_busy(start, end, "xfer")
-            self.schedule("xmit_done", end - self.engine.now,
-                          payload=req.payload)
+            self.schedule("xmit_done", end - now, payload=req.payload)
         elif event.kind == "xmit_done":
             xm: _Xmit = event.payload
-            bus = self.port("bus")
+            bus = self.bus
             bus.send(Request(src=bus, dst=None, kind="xfer_done",
                              payload=xm))
             if xm.dst_chip is not None:
@@ -213,6 +221,7 @@ class DmaEngine(Component):
         super().__init__(name)
         self.chip = chip
         self.legs = legs
+        self.bus = self.port("bus")  # cached: hot on every step/ack
         self._progs: dict = {}     # key -> [steps, idx]
         self._acks: dict = {}      # key -> outstanding xfer acks this step
         self._arrived: dict = {}   # (key, step idx) -> banked chunk count
@@ -273,9 +282,9 @@ class DmaEngine(Component):
             self._acks.pop(key, None)
             for slot in [s for s in self._arrived if s[0] == key]:
                 del self._arrived[slot]
-            self.port("bus").send(Request(
-                src=self.port("bus"), dst=None, kind="dma_done",
-                payload=(self.chip, key)))
+            bus = self.bus
+            bus.send(Request(src=bus, dst=None, kind="dma_done",
+                             payload=(self.chip, key)))
 
     def _start_step(self, key) -> None:
         steps, idx = self._progs[key]
@@ -299,10 +308,10 @@ class DmaEngine(Component):
             ack -= legs.exec_ps + legs.done_ps
         ack = max(legs.floor_ps, ack)
         self._acks[key] = len(step.xfers)
+        bus = self.bus
         for x in step.xfers:
-            self.port("bus").send(Request(
-                src=self.port("bus"), dst=None, kind="xfer",
-                size_bytes=int(x.bytes),
+            bus.send(Request(
+                src=bus, dst=None, kind="xfer", size_bytes=int(x.bytes),
                 payload=_Xmit(x.link, self.chip, key, ack, x.dst_chip, idx)))
 
 

@@ -5,12 +5,26 @@ import threading
 
 import pytest
 
-from repro.core import (Component, Connection, Engine, Event,
-                        LimitedConnection, LinkConnection, LookaheadScheduler,
-                        MetricsHook, Request, SCHEDULERS, SystemSpec,
-                        s_to_ps, simulate)
+from repro.core import (BatchParallelScheduler, Component, Connection,
+                        EmptyQueueError, Engine, Event, EventQueue,
+                        LimitedConnection, LinkConnection, LocalQueue,
+                        LookaheadScheduler, MetricsHook, Request, SCHEDULERS,
+                        ShardedEventQueue, SystemSpec, s_to_ps, simulate)
 
 ALL_SCHEDULERS = ("serial", "batch", "lookahead")
+
+
+def _grouped(name, max_workers=4):
+    """A round scheduler instance pinned to grouped (per-cluster)
+    execution on every round -- ``pool_min_events = 0`` disables the
+    adaptive merged/degenerate serial-equivalent paths, exercising the
+    commit machinery and the unsafe-post guard regardless of round
+    width."""
+    cls = {"batch": BatchParallelScheduler,
+           "lookahead": LookaheadScheduler}[name]
+    sched = cls(max_workers=max_workers)
+    sched.pool_min_events = 0
+    return sched
 
 
 class Ticker(Component):
@@ -31,8 +45,8 @@ class Ticker(Component):
             self.schedule("tick", self.gaps[idx])
 
 
-def _build(parallel, seed=0):
-    eng = Engine(parallel=parallel)
+def _build(scheduler, seed=0):
+    eng = Engine(scheduler=scheduler)
     rng = random.Random(seed)
     comps = [eng.register(Ticker(f"t{i}", [rng.randint(1, 5) * 100
                                            for _ in range(20)]))
@@ -45,13 +59,13 @@ def _build(parallel, seed=0):
 
 def test_serial_parallel_bit_identical():
     """DP-5: conservative parallel execution == serial execution."""
-    serial, _ = _build(parallel=False)
-    par, _ = _build(parallel=True)
+    serial, _ = _build("serial")
+    par, _ = _build("batch")
     assert serial == par
 
 
 def test_event_time_ordering():
-    log, eng = _build(parallel=False)
+    log, eng = _build("serial")
     for _, entries in log:
         times = [t for t, _ in entries]
         assert times == sorted(times)
@@ -59,7 +73,7 @@ def test_event_time_ordering():
 
 
 def test_batch_widths_recorded():
-    _, eng = _build(parallel=False)
+    _, eng = _build("serial")
     assert sum(eng.batch_widths) == eng.events_processed
     assert max(eng.batch_widths) >= 2       # ties exist with 100ps grid
 
@@ -252,10 +266,22 @@ def test_scheduler_registry_has_all_three():
         assert name in SCHEDULERS
 
 
-@pytest.mark.parametrize("scheduler", ALL_SCHEDULERS[1:])
+# Scheduler variants: by name (adaptive merged/grouped rounds) and
+# pinned-grouped instances (pool_min_events=0: every round exercises the
+# per-cluster contexts, the commit path and the worker pool).
+SCHED_VARIANTS = ("batch", "lookahead", "batch-grouped", "lookahead-grouped")
+
+
+def _sched_variant(spec):
+    if spec.endswith("-grouped"):
+        return _grouped(spec[: -len("-grouped")])
+    return spec
+
+
+@pytest.mark.parametrize("scheduler", SCHED_VARIANTS)
 def test_scheduler_bit_identical_to_serial(scheduler):
     oracle, eng_s, end_s = _build_sched("serial")
-    got, eng_p, end_p = _build_sched(scheduler)
+    got, eng_p, end_p = _build_sched(_sched_variant(scheduler))
     assert got == oracle
     assert end_p == end_s
     assert eng_p.events_processed == eng_s.events_processed
@@ -279,10 +305,10 @@ def _build_jitter(scheduler, n=8, ticks=120):
     return [(nd.sig, nd.count, nd.received) for nd in nodes], eng, end
 
 
-@pytest.mark.parametrize("scheduler", ALL_SCHEDULERS[1:])
+@pytest.mark.parametrize("scheduler", SCHED_VARIANTS)
 def test_scheduler_bit_identical_on_divergent_trace(scheduler):
     oracle, eng_s, end_s = _build_jitter("serial")
-    got, eng_p, end_p = _build_jitter(scheduler)
+    got, eng_p, end_p = _build_jitter(_sched_variant(scheduler))
     assert got == oracle and end_p == end_s
     assert eng_p.events_processed == eng_s.events_processed
 
@@ -360,7 +386,10 @@ class RogueDispatcher(Component):
 
 
 def test_lookahead_detects_unsafe_cross_cluster_post():
-    eng = Engine(scheduler="lookahead")
+    """The guard lives in the grouped execution path (narrow rounds run
+    serial-equivalent, where an unsafe post cannot corrupt anything), so
+    it is pinned on via pool_min_events = 0."""
+    eng = Engine(scheduler=_grouped("lookahead"))
     victim = eng.register(Ticker("v", [100, 100]))
     rogue = eng.register(RogueDispatcher("r", victim))
     # a (stateless, nonzero-latency) connection keeps the clusters apart
@@ -373,11 +402,20 @@ def test_lookahead_detects_unsafe_cross_cluster_post():
         eng.run()
 
 
-def test_serial_batch_identical_under_legacy_flag():
-    """Engine(parallel=True) still maps to the batch scheduler."""
-    eng = Engine(parallel=True)
+def test_legacy_parallel_flag_deprecated_but_mapped():
+    """Engine(parallel=True) still maps to the batch scheduler -- with a
+    DeprecationWarning pointing at scheduler=."""
+    with pytest.warns(DeprecationWarning, match="scheduler="):
+        eng = Engine(parallel=True)
     assert eng.scheduler.name == "batch"
-    assert Engine().scheduler.name == "serial"
+    assert Engine().scheduler.name == "serial"   # and no warning here
+
+
+def test_system_parallel_flag_deprecated_but_mapped():
+    from repro.core import System
+    with pytest.warns(DeprecationWarning, match="scheduler="):
+        sys_ = System(SystemSpec(pod_shape=(2, 2)), parallel=True)
+    assert sys_.engine.scheduler.name == "batch"
 
 
 def test_custom_scheduler_instance_accepted():
@@ -526,11 +564,12 @@ def _build_zero_delay(scheduler):
     return tuple(mixer.order)
 
 
-@pytest.mark.parametrize("scheduler", ALL_SCHEDULERS[1:])
+@pytest.mark.parametrize("scheduler", SCHED_VARIANTS)
 def test_same_time_self_post_vs_cross_post_order(scheduler):
     """Regression: batch once ran same-time self-posts locally within the
     round, ahead of same-time cross-group posts serial would run first."""
-    assert _build_zero_delay(scheduler) == _build_zero_delay("serial")
+    assert (_build_zero_delay(_sched_variant(scheduler))
+            == _build_zero_delay("serial"))
 
 
 class DelayZeroChainer(Component):
@@ -585,12 +624,13 @@ def _build_delay_zero_chain(scheduler):
     return tuple(sink.log)
 
 
-@pytest.mark.parametrize("scheduler", ALL_SCHEDULERS[1:])
+@pytest.mark.parametrize("scheduler", SCHED_VARIANTS)
 def test_delay_zero_chain_keeps_snapshot_round_order(scheduler):
     """Regression: lookahead once ran a lower-rank delay-0 follow-up
     before a same-time higher-rank event in the same fused cluster,
     reversing link occupancy vs serial's snapshot-round semantics."""
-    assert _build_delay_zero_chain(scheduler) == _build_delay_zero_chain("serial")
+    assert (_build_delay_zero_chain(_sched_variant(scheduler))
+            == _build_delay_zero_chain("serial"))
 
 
 class Echo(Component):
@@ -622,3 +662,202 @@ def test_limited_connection_slot_free_before_handling(scheduler):
     eng.run()
     assert echo.reply_ok == [True]          # slot was free at handling time
     assert asker.received == 1              # the reply arrived
+
+
+# ---------------------------------------------------------------------------
+# Queue-level regressions: EmptyQueueError, the sharded queue's total order,
+# and LocalQueue generation ordering for same-timestamp chains.
+# ---------------------------------------------------------------------------
+
+def test_peek_time_on_empty_queue_raises_clear_error():
+    """Regression: peek_time used to raise a bare IndexError ('list index
+    out of range') on an empty queue; now every queue variant raises
+    EmptyQueueError (an IndexError subclass, so old guards still work)
+    with an actual explanation."""
+    for q in (EventQueue(), ShardedEventQueue(4), LocalQueue()):
+        with pytest.raises(EmptyQueueError, match="empty"):
+            q.peek_time()
+        with pytest.raises(IndexError):     # backwards-compatible guard
+            q.peek_time()
+
+
+def test_sharded_queue_preserves_global_total_order():
+    """pop_window / pop on the sharded queue must yield the exact
+    (time, rank, seq) order of the single-heap queue, with seq ties only
+    ever arising within one shard (one component)."""
+    rng = random.Random(7)
+
+    def fill(q, comps):
+        rng2 = random.Random(42)
+        for _ in range(300):
+            c = comps[rng2.randrange(len(comps))]
+            q.push(Event(time=rng2.randrange(50) * 100, component=c,
+                         kind="k"))
+
+    def mkcomps():
+        comps = [Sink(f"c{i}") for i in range(8)]
+        for i, c in enumerate(comps):
+            c.rank = i
+            c.cluster_id = i % 3            # 3 shards, interleaved ranks
+        return comps
+
+    plain, sharded = EventQueue(), ShardedEventQueue(3)
+    comps_a, comps_b = mkcomps(), mkcomps()
+    fill(plain, comps_a)
+    fill(sharded, comps_b)
+    order_plain = [(e.time, e.component.rank, e.seq)
+                   for e in plain.pop_window(10**9)]
+    order_sharded = [(e.time, e.component.rank, e.seq)
+                     for e in sharded.pop_window(10**9)]
+    assert order_plain == order_sharded
+    assert len(sharded) == 0
+
+
+def test_sharded_queue_migration_keeps_pending_events():
+    """RoundScheduler.prepare re-homes a populated queue: pending events
+    keep their seqs and the live counter carries over."""
+    comps = [Sink(f"c{i}") for i in range(4)]
+    for i, c in enumerate(comps):
+        c.rank = i
+        c.cluster_id = i % 2
+    plain = EventQueue()
+    for i, c in enumerate(comps):
+        plain.push(Event(time=100 * (4 - i), component=c, kind="k"))
+    sharded = ShardedEventQueue.from_queue(plain, 2)
+    assert len(plain) == 0 and len(sharded) == 4
+    sharded.push(Event(time=50, component=comps[0], kind="later"))
+    assert sharded.pop().seq == 4           # counter continued past 0..3
+    times = [sharded.pop().time for _ in range(4)]
+    assert times == [100, 200, 300, 400]
+
+
+def test_local_queue_generation_ordering_three_generations():
+    """Same-timestamp chains across >= 3 generations: a locally created
+    event at its creator's own timestamp sorts after *every* same-time
+    event of earlier generations regardless of rank -- serial's
+    snapshot-round semantics."""
+    hi, lo = Sink("hi"), Sink("lo")
+    hi.rank, lo.rank = 9, 1
+    lq = LocalQueue()
+    lq.adopt(Event(time=100, component=hi, kind="g0", seq=7))
+    # generation 1 from rank 9, generation 2 from rank 1, generation 3
+    # from rank 9: rank must NOT override generation
+    lq.push_new(Event(time=100, component=lo, kind="g1"), generation=1)
+    lq.push_new(Event(time=100, component=hi, kind="g2"), generation=2)
+    lq.push_new(Event(time=100, component=lo, kind="g3"), generation=3)
+    lq.push_new(Event(time=100, component=hi, kind="g1b"), generation=1)
+    order = []
+    while lq:
+        gen, ev = lq.pop()
+        order.append((gen, ev.kind))
+    assert order == [(0, "g0"), (1, "g1"), (1, "g1b"), (2, "g2"),
+                     (3, "g3")]
+    # within generation 1 the two events kept rank order (lo before hi)
+    assert [k for g, k in order if g == 1] == ["g1", "g1b"]
+
+
+class ChainStarter(Component):
+    """tick -> delay-0 chain 3 generations deep at one timestamp, racing
+    a same-time event on a sibling component -- the engine-level image of
+    the LocalQueue generation test."""
+
+    def __init__(self, name):
+        super().__init__(name)
+        self.log = []
+
+    def handle(self, event):
+        self.log.append((self.engine.now, event.kind))
+        if event.kind == "tick":
+            self.schedule("gen1", 0)
+        elif event.kind == "gen1":
+            self.schedule("gen2", 0)
+        elif event.kind == "gen2":
+            self.schedule("gen3", 0)
+
+
+def _build_generation_chain(scheduler):
+    eng = Engine(scheduler=scheduler)
+    chains = [eng.register(ChainStarter(f"c{i}")) for i in range(4)]
+    for c in chains:
+        c.schedule("tick", 100)
+        c.schedule("tick", 300)
+    eng.run()
+    return [tuple(c.log) for c in chains]
+
+
+@pytest.mark.parametrize("scheduler", SCHED_VARIANTS)
+def test_generation_chains_bit_identical(scheduler):
+    assert (_build_generation_chain(_sched_variant(scheduler))
+            == _build_generation_chain("serial"))
+
+
+# ---------------------------------------------------------------------------
+# Engine.post from foreign threads against the *sharded* queue at 8 workers.
+# ---------------------------------------------------------------------------
+
+def test_post_foreign_threads_stress_sharded_queue_8_workers():
+    """After a lookahead run the engine queue is cluster-sharded; posts
+    from foreign threads must still land correctly (routed to the right
+    shard under the post lock) and a subsequent 8-worker run must drain
+    every one of them."""
+    eng = Engine(scheduler="lookahead", max_workers=8)
+    comps = [eng.register(Counter(f"c{i}")) for i in range(8)]
+    comps[0].schedule("warmup", 1)
+    eng.run()                               # shards the queue (8 clusters)
+    assert isinstance(eng.queue, ShardedEventQueue)
+    base = eng.events_processed
+
+    n_threads, per_thread = 8, 400
+    start = threading.Barrier(n_threads)
+
+    def flood(tid):
+        start.wait()
+        for k in range(per_thread):
+            eng.post(Event(time=eng.now + (tid * per_thread + k) % 777 + 1,
+                           component=comps[(tid + k) % len(comps)],
+                           kind="w"))
+
+    threads = [threading.Thread(target=flood, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(eng.queue) == n_threads * per_thread
+    eng.run()
+    assert eng.events_processed - base == n_threads * per_thread
+    # + 1: the warmup event that sharded the queue
+    assert sum(c.handled for c in comps) == n_threads * per_thread + 1
+
+
+def test_sharded_queue_pop_breaks_cross_shard_time_ties_by_rank():
+    """Regression: pop() once took the lowest *shard id* on a cross-shard
+    time tie instead of the lowest component rank (the global order)."""
+    hi, lo = Sink("hi"), Sink("lo")
+    hi.rank, lo.rank = 5, 2
+    hi.cluster_id, lo.cluster_id = 0, 1     # low rank lives in shard 1
+    q = ShardedEventQueue(2)
+    q.push(Event(time=100, component=hi, kind="a"))
+    q.push(Event(time=100, component=lo, kind="b"))
+    assert [q.pop().component.rank for _ in range(2)] == [2, 5]
+
+
+class PastPoster(Component):
+    """Posts an event into the simulation past -- must be rejected."""
+
+    def handle(self, event):
+        if event.kind == "go":
+            self.engine.post(Event(time=self.engine.now - 500,
+                                   component=self, kind="too_late"))
+
+
+@pytest.mark.parametrize("scheduler", ("serial",) + SCHED_VARIANTS)
+def test_past_post_rejected_in_every_scheduler(scheduler):
+    """The 'cannot schedule into the past' guard must hold on every
+    scheduler's post sink (regression: the serial/degenerate fast sinks
+    once pushed unguarded)."""
+    eng = Engine(scheduler=_sched_variant(scheduler))
+    p = eng.register(PastPoster("p"))
+    p.schedule("go", 1000)
+    with pytest.raises(AssertionError, match="past"):
+        eng.run()

@@ -1,0 +1,118 @@
+"""Hot-path profiling harness for the event engine.
+
+Replays the multi-tenant event-fabric trace from
+``benchmarks/fabric_contention.py`` (the densest event producer in the
+repo) under any scheduler and prints either
+
+* a timeit-style throughput summary (default), or
+* a cProfile per-function hot-path table (``--profile``),
+
+so perf PRs have a one-command, apples-to-apples baseline:
+
+    python tools/profile_engine.py                      # serial throughput
+    python tools/profile_engine.py --scheduler lookahead --workers 4
+    python tools/profile_engine.py --profile --sort tottime --limit 25
+    python tools/profile_engine.py --all                # every scheduler
+
+Wall-clock numbers here are what ``BENCH_fabric.json``'s ``replay``
+section tracks; the per-function table is what tells you *which* layer
+(queue, dispatch, handlers, commit) to attack next.
+"""
+from __future__ import annotations
+
+import argparse
+import cProfile
+import io
+import os
+import pstats
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for p in (_ROOT, os.path.join(_ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+from benchmarks.fabric_contention import SPEC, _tenant_ops  # noqa: E402
+from repro.core import System  # noqa: E402
+
+
+def build_system(scheduler: str, workers: int, tenants: int, rounds: int):
+    system = System(SPEC, fabric="event", scheduler=scheduler,
+                    max_workers=workers)
+    for tid in range(tenants):
+        ops, devs = _tenant_ops(tid, rounds)
+        system.load_trace(ops, devs)
+    return system
+
+
+def run_once(args, scheduler: str) -> dict:
+    system = build_system(scheduler, args.workers, args.tenants, args.rounds)
+    t0 = time.perf_counter()
+    system.run()
+    wall = time.perf_counter() - t0
+    eng = system.engine
+    return {"scheduler": scheduler, "wall_s": wall,
+            "events": eng.events_processed,
+            "events_per_sec": eng.events_processed / wall if wall else 0.0,
+            "rounds": len(eng.window_widths or eng.batch_widths)}
+
+
+def print_row(r: dict) -> None:
+    print(f"{r['scheduler']:>10}  {r['wall_s']*1e3:9.1f} ms  "
+          f"{r['events']:7d} events  {r['events_per_sec']:10.0f} ev/s  "
+          f"{r['rounds']:6d} rounds")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="profile the engine over the event-fabric replay trace")
+    ap.add_argument("--scheduler", default="serial",
+                    choices=("serial", "batch", "lookahead"))
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--tenants", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=6,
+                    help="trace rounds per tenant (trace length)")
+    ap.add_argument("--repeat", type=int, default=3,
+                    help="timing repetitions (best is reported)")
+    ap.add_argument("--all", action="store_true",
+                    help="time every scheduler instead of --scheduler")
+    ap.add_argument("--profile", action="store_true",
+                    help="cProfile one run and print the hot-path table")
+    ap.add_argument("--sort", default="cumulative",
+                    choices=("cumulative", "tottime", "ncalls"),
+                    help="cProfile sort column")
+    ap.add_argument("--limit", type=int, default=30,
+                    help="rows of the cProfile table")
+    args = ap.parse_args(argv)
+
+    if args.profile:
+        system = build_system(args.scheduler, args.workers, args.tenants,
+                              args.rounds)
+        prof = cProfile.Profile()
+        prof.enable()
+        system.run()
+        prof.disable()
+        eng = system.engine
+        print(f"# scheduler={args.scheduler} workers={args.workers} "
+              f"events={eng.events_processed}")
+        buf = io.StringIO()
+        stats = pstats.Stats(prof, stream=buf)
+        stats.strip_dirs().sort_stats(args.sort).print_stats(args.limit)
+        print(buf.getvalue())
+        return 0
+
+    print(f"# tenants={args.tenants} rounds={args.rounds} "
+          f"workers={args.workers} repeat={args.repeat} (best shown)")
+    print(f"{'scheduler':>10}  {'wall':>12}  {'':>14}  {'throughput':>15}")
+    scheds = (("serial", "batch", "lookahead") if args.all
+              else (args.scheduler,))
+    for sched in scheds:
+        best = min((run_once(args, sched) for _ in range(args.repeat)),
+                   key=lambda r: r["wall_s"])
+        print_row(best)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

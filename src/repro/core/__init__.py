@@ -9,7 +9,9 @@ from .event import (Event, EventQueue, ShardedEventQueue, LocalQueue,
                     EmptyQueueError)
 from .engine import (Engine, Scheduler, RoundScheduler, SCHEDULERS,
                      make_scheduler, register_scheduler, SerialScheduler,
-                     BatchParallelScheduler, LookaheadScheduler)
+                     BatchParallelScheduler, LookaheadScheduler,
+                     Executor, EXECUTORS, make_executor, register_executor,
+                     ThreadExecutor, ProcExecutor)
 from .component import Component, Port
 from .connection import Connection, LinkConnection, LimitedConnection, Request
 from .hooks import (Hook, HookCtx, Hookable, Tracer, MetricsHook, StallHook,
@@ -30,6 +32,8 @@ __all__ = [
     "Event", "EventQueue", "ShardedEventQueue", "LocalQueue",
     "EmptyQueueError", "Engine", "Scheduler",
     "RoundScheduler", "SCHEDULERS", "make_scheduler", "register_scheduler",
+    "Executor", "EXECUTORS", "make_executor", "register_executor",
+    "ThreadExecutor", "ProcExecutor",
     "SerialScheduler", "BatchParallelScheduler", "LookaheadScheduler",
     "Component", "Port",
     "Connection", "LinkConnection", "LimitedConnection", "Request",

@@ -49,6 +49,30 @@ class Registered:
     must mix this in (``Engine.register`` writes ``engine``/``rank``;
     ``Engine.compute_clusters`` writes ``cluster_id``)."""
 
+    # -- shard residency (the ``procs`` executor contract) ---------------
+    # Under a process-backed executor each cluster's components live in
+    # one long-lived worker process for the whole run: handlers mutate
+    # the *worker's* replica, and only compact per-round messages cross
+    # the process boundary.  At the end of the run the worker ships each
+    # component's mutable state back so the parent replica is faithful
+    # again.  ``shard_state`` defines what ships: by default everything
+    # in ``__dict__`` except the names in ``shard_state_skip``.
+    # References to other registered items / ports / the engine survive
+    # the trip as ranks (see ``engine.executor.wire``), so object
+    # identity with the parent's graph is preserved.  Items that keep
+    # mutable state outside ``__dict__`` (``__slots__`` subclasses) or
+    # hold unpicklable values must override these two methods.
+    shard_state_skip: frozenset = frozenset(("_hooks",))
+
+    def shard_state(self) -> dict:
+        """Mutable state a shard worker must ship back to the parent."""
+        skip = self.shard_state_skip
+        return {k: v for k, v in self.__dict__.items() if k not in skip}
+
+    def apply_shard_state(self, state: dict) -> None:
+        """Adopt state shipped back from this item's shard worker."""
+        self.__dict__.update(state)
+
     engine = None               # set by Engine.register
     rank = 0                    # set by Engine.register (deterministic)
     cluster_id = 0              # set by Engine.compute_clusters: the

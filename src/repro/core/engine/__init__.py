@@ -2,10 +2,15 @@
 
 ``Engine`` keeps its historical constructor (``parallel=`` maps to the
 batch scheduler) plus ``scheduler="serial"|"batch"|"lookahead"`` and
-accepts any :class:`Scheduler` instance for custom strategies.
+accepts any :class:`Scheduler` instance for custom strategies.  Round
+schedulers additionally take ``executor="threads"|"procs"`` -- where
+grouped rounds run (in-process pool vs shard-resident worker
+processes; see :mod:`repro.core.engine.executor`).
 """
 from .base import (Engine, Scheduler, RoundScheduler, SCHEDULERS,
                    make_scheduler, register_scheduler)
+from .executor import (Executor, EXECUTORS, make_executor,
+                       register_executor, ThreadExecutor, ProcExecutor)
 from .serial import SerialScheduler
 from .batch import BatchParallelScheduler
 from .lookahead import LookaheadScheduler
@@ -13,5 +18,7 @@ from .lookahead import LookaheadScheduler
 __all__ = [
     "Engine", "Scheduler", "RoundScheduler", "SCHEDULERS",
     "make_scheduler", "register_scheduler",
+    "Executor", "EXECUTORS", "make_executor", "register_executor",
+    "ThreadExecutor", "ProcExecutor",
     "SerialScheduler", "BatchParallelScheduler", "LookaheadScheduler",
 ]

@@ -41,13 +41,19 @@ Hot-path design (the allocation-lean event core):
   phase routes posts per destination shard -- only *cross-cluster*
   traffic is ever merged, and then only with the posts of that one
   shard (see the seq-locality argument on ``ShardedEventQueue``).
-* Per-cluster :class:`_GroupCtx` objects and the worker pool live for
-  the whole ``run`` (reset, not reallocated, each round), with sticky
-  ``cluster_id % max_workers`` worker assignment.
+* Per-cluster :class:`_GroupCtx` objects and the executor backend live
+  for the whole ``run`` (reset, not reallocated, each round), with
+  sticky ``cluster_id % workers`` worker assignment.
+
+Round schedulers split *what* runs (window, grouping, commit order --
+this module) from *where* it runs (an :class:`~repro.core.engine
+.executor.Executor` backend): ``executor="threads"`` is the in-process
+pool, ``executor="procs"`` pins each cluster to a long-lived worker
+process with shard-resident component state.  See
+:mod:`repro.core.engine.executor`.
 """
 from __future__ import annotations
 
-import concurrent.futures
 import threading
 import typing
 import warnings
@@ -56,6 +62,7 @@ from heapq import heappop as _heappop
 
 from ..event import Event, EventQueue, LocalQueue, ShardedEventQueue
 from ..hooks import Hookable, EVENT_START, EVENT_END
+from .executor import make_executor
 
 
 def guarded_push(engine: "Engine", queue) -> typing.Callable:
@@ -111,23 +118,33 @@ def register_scheduler(name: str, factory) -> None:
     SCHEDULERS[name] = factory
 
 
-def make_scheduler(spec, max_workers: int = 4) -> Scheduler:
-    """Resolve a scheduler name (or pass through an instance)."""
+def make_scheduler(spec, max_workers: int = 4, executor=None) -> Scheduler:
+    """Resolve a scheduler name (or pass through an instance).
+
+    ``executor`` (name or :class:`~repro.core.engine.executor.Executor`
+    instance) selects where round schedulers run grouped work; ``None``
+    keeps the scheduler's default (``"threads"``).  The serial
+    scheduler executes in-thread and ignores it.
+    """
     if isinstance(spec, Scheduler):
-        return spec
-    try:
-        factory = SCHEDULERS[spec]
-    except KeyError:
-        raise ValueError(f"unknown scheduler {spec!r}; "
-                         f"available: {sorted(SCHEDULERS)}") from None
-    return factory(max_workers=max_workers)
+        sched = spec
+    else:
+        try:
+            factory = SCHEDULERS[spec]
+        except KeyError:
+            raise ValueError(f"unknown scheduler {spec!r}; "
+                             f"available: {sorted(SCHEDULERS)}") from None
+        sched = factory(max_workers=max_workers)
+    if executor is not None:
+        sched.executor_spec = executor
+    return sched
 
 
 # -- engine ------------------------------------------------------------------
 
 class Engine(Hookable):
     def __init__(self, parallel: bool = False, max_workers: int = 4,
-                 scheduler=None) -> None:
+                 scheduler=None, executor=None) -> None:
         super().__init__()
         if parallel:
             warnings.warn(
@@ -152,8 +169,8 @@ class Engine(Hookable):
                                             # in benchmarks/fabric_contention)
         if scheduler is None:
             scheduler = "batch" if parallel else "serial"
-        self.scheduler = make_scheduler(scheduler,
-                                        max_workers=max_workers).bind(self)
+        self.scheduler = make_scheduler(scheduler, max_workers=max_workers,
+                                        executor=executor).bind(self)
 
     # -- clock ----------------------------------------------------------------
     @property
@@ -490,21 +507,33 @@ class _GroupCtx:
 
 
 class RoundScheduler(Scheduler):
-    """Round-based executor: pop a window per shard, run groups, commit.
+    """Round-based scheduler: pop a window per shard, run groups, commit.
 
     Grouping is always by engine cluster (``compute_clusters``; the
     event queue is sharded the same way), so a cluster's window slice
     pops straight out of its own shard.  Subclasses choose the window
-    width (:meth:`window_end`); ``use_pool`` turns on the worker pool.
-    The commit phase pushes newly created events per destination shard
-    in serial post order (stamp order), so all same-(time, rank)
-    tie-breaks -- the only place seq is ever consulted -- are identical
-    to serial execution.
+    width (:meth:`window_end`); ``use_pool`` turns on parallel worker
+    dispatch.  *Where* a grouped round's contexts execute is delegated
+    to a pluggable executor backend (``executor_spec``, default
+    ``"threads"``; see :mod:`repro.core.engine.executor`) -- this class
+    only selects the execution *mode* per round (merged serial-
+    equivalent vs grouped) and runs the commit.  The commit phase
+    pushes newly created events per destination shard in serial post
+    order (stamp order), so all same-(time, rank) tie-breaks -- the
+    only place seq is ever consulted -- are identical to serial
+    execution, whichever executor ran the round.
     """
 
     use_pool = False
     strict_window = False
     record_window_widths = False
+    # Executor backend (name or instance) resolved in ``prepare``.  The
+    # "threads" default keeps state in-process, which is what allows
+    # the adaptive merged/degenerate inline paths below; backends with
+    # shard-resident state (``"procs"``) declare ``inline_rounds =
+    # False`` and receive every round, however narrow.
+    executor_spec = "threads"
+    executor = None                         # bound instance, set by prepare
     # Record per-round (cluster id, events) pairs into
     # ``engine.round_group_sizes`` -- the input to the architectural
     # (critical-path) speedup model benchmarks report.  Off by default:
@@ -536,8 +565,9 @@ class RoundScheduler(Scheduler):
         return component.cluster_id
 
     def prepare(self) -> None:
-        """Called once per ``run``: derive clusters, shard the queue and
-        build the persistent per-cluster contexts + worker buckets."""
+        """Called once per ``run``: derive clusters, shard the queue,
+        build the persistent per-cluster contexts and bring up the
+        executor backend."""
         eng = self.engine
         self._cluster_of = eng.compute_clusters()
         nshards = max(1, (max(self._cluster_of) + 1) if self._cluster_of
@@ -547,7 +577,10 @@ class RoundScheduler(Scheduler):
         self._merged = _MergedCtx(self, -1)
         self._merged.push_global = eng.queue.push
         self._commit: list = []             # reused per-round post buffer
-        self._buckets = [[] for _ in range(max(1, self.max_workers))]
+        self.executor = make_executor(self.executor_spec,
+                                      max_workers=self.max_workers)
+        self.executor.bind(self)
+        self.executor.prepare(self._ctxs)
 
     def run(self, until_ps: int = None) -> int:
         eng = self.engine
@@ -555,22 +588,26 @@ class RoundScheduler(Scheduler):
         queue = eng.queue
         ctxs = self._ctxs
         commit = self._commit
-        buckets = self._buckets
-        nworkers = self.max_workers
-        pool_ok = self.use_pool and nworkers > 1
+        executor = self.executor
+        # Only executors whose state lives in this process may let the
+        # scheduler thread execute events itself (the merged/degenerate
+        # serial-equivalent paths); shard-resident backends must see
+        # every round, however narrow.
+        inline_ok = executor.inline_rounds
         pool_min = self.pool_min_events
         record_widths = self.record_window_widths
         record_groups = self.record_group_sizes
         tls = eng._tls
         serial_sink = guarded_push(eng, queue)
-        pool = None
         # Execution-mode predictor: rounds narrower than pool_min_events
         # run serial-equivalent (merged / degenerate), wider rounds run
-        # grouped on the pool.  The mode must be chosen before the pop,
-        # so the previous round's width predicts the next -- safe because
-        # BOTH modes are bit-exact; a mispredict only costs speed, and
-        # the predictor corrects itself on the very next round.
-        prefer_merged = pool_min > 1 and not record_groups
+        # grouped on the executor.  The mode must be chosen before the
+        # pop, so the previous round's width predicts the next -- safe
+        # because BOTH modes are bit-exact; a mispredict only costs
+        # speed, and the predictor corrects itself on the very next
+        # round.
+        prefer_merged = inline_ok and pool_min > 1 and not record_groups
+        failed = True
         try:
             while queue:
                 t = queue.peek_time()
@@ -617,7 +654,8 @@ class RoundScheduler(Scheduler):
                     continue
 
                 popped, nev = queue.pop_window_sharded(wend)
-                prefer_merged = nev < pool_min and not record_groups
+                prefer_merged = (inline_ok and nev < pool_min
+                                 and not record_groups)
 
                 tasks = []
                 for sid, entries in popped:
@@ -625,19 +663,7 @@ class RoundScheduler(Scheduler):
                     ctx.begin(wend, entries)
                     tasks.append(ctx)
 
-                if pool_ok and len(tasks) > 1:
-                    if pool is None:
-                        pool = concurrent.futures.ThreadPoolExecutor(
-                            nworkers)
-                    for b in buckets:
-                        b.clear()
-                    for ctx in tasks:       # sticky cluster -> worker
-                        buckets[ctx.group_id % nworkers].append(ctx)
-                    list(pool.map(_run_chunk,
-                                  [b for b in buckets if b]))
-                else:
-                    for ctx in tasks:
-                        ctx.execute()
+                executor.run_round(tasks, nev)
 
                 executed = 0
                 tmax = t
@@ -680,10 +706,16 @@ class RoundScheduler(Scheduler):
                         push(p[2])
                     commit.clear()
                 eng.now = tmax
+            failed = False
         finally:
-            if pool is not None:
-                pool.shutdown()
+            executor.finalize(failed=failed)
         return eng.now
+
+    def describe(self) -> dict:
+        d = super().describe()
+        d["executor"] = (self.executor.describe() if self.executor
+                         is not None else self.executor_spec)
+        return d
 
 
 class _MergedCtx(_GroupCtx):
@@ -719,6 +751,3 @@ class _MergedCtx(_GroupCtx):
             self.push_global(event)
 
 
-def _run_chunk(chunk) -> None:
-    for ctx in chunk:
-        ctx.execute()

@@ -31,7 +31,30 @@ class HookCtx:
 
 
 class Hook:
-    """Base hook: override ``func``."""
+    """Base hook: override ``func``.
+
+    Shard residency (``executor="procs"``): engine-level hooks fire in
+    every shard worker on that worker's replica of the hook, so their
+    observations end the run partitioned across processes.  A hook that
+    defines ``merge_shard(self, replica)`` gets each worker's replica
+    merged back into the parent instance at the end of the run (the
+    method must be commutative across replicas -- counter sums, maxima).
+    Because the workers fork *with* the parent's pre-run state, each
+    one swaps the engine-level hook for :meth:`fresh_shard` at startup
+    and accumulates only its own observations -- otherwise the fork
+    baseline (e.g. a previous run's counters) would merge back once
+    per worker.  Hooks without ``merge_shard`` keep only parent-side
+    observations under procs; their *side effects on components* (e.g.
+    FaultInjector's fault flags) still replicate faithfully, because
+    those live in component state, which is shard-resident and synced
+    back.  See docs/engine.md.
+    """
+
+    def fresh_shard(self) -> "Hook":
+        """A zero-state instance for a shard worker to accumulate into.
+        The default assumes a zero-argument constructor; mergeable
+        hooks with required constructor arguments must override."""
+        return type(self)()
 
     def func(self, ctx: HookCtx) -> None:  # pragma: no cover - interface
         raise NotImplementedError
@@ -97,6 +120,16 @@ class MetricsHook(Hook):
         if ctx.position in (EVENT_END, REQ_DELIVER):
             self.end_time_ps = max(self.end_time_ps, ctx.time)
 
+    def merge_shard(self, replica: "MetricsHook") -> None:
+        """Fold a shard worker's observations into this instance: each
+        worker saw a disjoint partition of the events, so counters sum
+        and the end time is the max (order-independent across workers)."""
+        self.busy_ps.update(replica.busy_ps)
+        self.busy_by_tag.update(replica.busy_by_tag)
+        self.bytes_sent.update(replica.bytes_sent)
+        self.requests.update(replica.requests)
+        self.end_time_ps = max(self.end_time_ps, replica.end_time_ps)
+
     def utilization(self, name: str) -> float:
         if self.end_time_ps == 0:
             return 0.0
@@ -115,6 +148,9 @@ class StallHook(Hook):
 
     def __init__(self) -> None:
         self.stalls = collections.Counter()
+
+    def merge_shard(self, replica: "StallHook") -> None:
+        self.stalls.update(replica.stalls)
 
     def func(self, ctx: HookCtx) -> None:
         if ctx.position == EVENT_START and getattr(ctx.item, "kind", "") == "stall":

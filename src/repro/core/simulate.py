@@ -42,13 +42,16 @@ class SimReport:
     fabric: str = "analytic"       # which interconnect backend priced it
     link_utilization: dict = dataclasses.field(default_factory=dict)
     scheduler: str = "serial"      # which engine scheduler produced this
+    executor: str = "none"         # where grouped rounds ran (threads /
+                                   # procs; "none" for the serial scheduler)
     batch_widths: typing.List[int] = dataclasses.field(default_factory=list)
     window_widths: typing.List[int] = dataclasses.field(default_factory=list)
 
     # Execution artifacts (how the engine drained the queue) are excluded:
-    # summaries must be bit-identical across schedulers, and the
-    # parametrized determinism tests compare exactly this dict.
-    _EXECUTION_FIELDS = ("scheduler", "batch_widths", "window_widths")
+    # summaries must be bit-identical across schedulers AND executors,
+    # and the parametrized determinism tests compare exactly this dict.
+    _EXECUTION_FIELDS = ("scheduler", "executor", "batch_widths",
+                         "window_widths")
 
     def summary(self) -> dict:
         return {k: v for k, v in dataclasses.asdict(self).items()
@@ -85,7 +88,7 @@ def _select_devices(cost: HloCost, total: int,
 def simulate(hlo_text: str = None, cost: HloCost = None,
              spec: SystemSpec = None, parallel: bool = False,
              scheduler: str = None, max_workers: int = 4,
-             fabric: str = None,
+             fabric: str = None, executor: str = None,
              device_limit: typing.Optional[int] = 32,
              dtype_bits: int = 16, repeat_cap: int = 64,
              faults: dict = None, deadline_s: float = None,
@@ -96,6 +99,13 @@ def simulate(hlo_text: str = None, cost: HloCost = None,
     "lookahead"); defaults to "serial".  The legacy ``parallel=True``
     knob maps to "batch" with a ``DeprecationWarning``.  All schedulers
     produce bit-identical ``SimReport.summary()``s.
+
+    ``executor``: where round schedulers run grouped work ("threads" |
+    "procs"); defaults to "threads".  "procs" executes handlers in
+    shard-resident worker processes (real cores, no GIL) and is
+    bit-identical too -- engine-level hook state is merged back at the
+    end of the run (hooks that define ``merge_shard``).  Ignored by the
+    serial scheduler.
 
     ``fabric``: interconnect backend name ("analytic" | "event");
     defaults to ``spec.fabric``.  See docs/fabric.md.
@@ -113,7 +123,7 @@ def simulate(hlo_text: str = None, cost: HloCost = None,
     spec = spec or SystemSpec()
     system = System(spec, parallel=parallel, deadline_s=deadline_s,
                     scheduler=scheduler, max_workers=max_workers,
-                    fabric=fabric)
+                    fabric=fabric, executor=executor)
     metrics = MetricsHook()
     # Engine-level hook only: it already sees busy intervals + requests,
     # and hooks attached directly to connections would mark them
@@ -159,6 +169,9 @@ def simulate(hlo_text: str = None, cost: HloCost = None,
         link_utilization=system.fabric.link_utilization(
             s_to_ps(t) if t else None),
         scheduler=system.engine.scheduler.name,
+        executor=(system.engine.scheduler.executor.name
+                  if getattr(system.engine.scheduler, "executor", None)
+                  is not None else "none"),
         batch_widths=system.engine.batch_widths,
         window_widths=system.engine.window_widths,
     )

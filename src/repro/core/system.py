@@ -186,7 +186,7 @@ class System:
 
     def __init__(self, spec: SystemSpec, parallel: bool = False,
                  deadline_s: float = None, scheduler=None,
-                 max_workers: int = 4, fabric=None) -> None:
+                 max_workers: int = 4, fabric=None, executor=None) -> None:
         from ..fabric import make_fabric   # late: fabric imports core modules
         self.spec = spec
         if parallel:
@@ -196,7 +196,8 @@ class System:
                 DeprecationWarning, stacklevel=2)
             if scheduler is None:
                 scheduler = "batch"
-        self.engine = Engine(scheduler=scheduler, max_workers=max_workers)
+        self.engine = Engine(scheduler=scheduler, max_workers=max_workers,
+                             executor=executor)
         self.fabric = make_fabric(fabric or spec.fabric, spec)
         self.topology = self.fabric.topology
         self.programs: typing.List[DeviceProgram] = []

@@ -36,13 +36,18 @@ identical to a zero-latency-bus replay -- parity with the analytic
 oracle is preserved to ``s_to_ps`` rounding, and all schedulers remain
 bit-identical (the commit-phase ordering argument in docs/engine.md).
 
-Ring steps additionally carry the ring *data dependency*: each chip's
+Decompositions additionally carry the *consumer data dependency*
+(delivered as ``chunk`` requests to the downstream DMA): each ring
 step ``i+1`` waits for the chunks its two ring neighbors forwarded in
-step ``i`` (delivered as ``chunk`` requests to the downstream DMA).  On
-a healthy symmetric ring the chunks arrive exactly when the chip's own
-acks do, so timing is unchanged; under a degraded or transiently failed
-link the stall now propagates around the whole ring instead of pinning
-only the sending chip's chain -- the honest failure mode.
+step ``i``; a ring all-to-all's single exchange step waits on both
+neighbors the same way; and a collective-permute receiver closes with
+an arrival gate fed by the final hop of its producer's store-and-
+forward chain.  On a healthy fabric the chunks arrive exactly when the
+consumers' own acks/gates fall due, so timing is unchanged; under a
+degraded or transiently failed link the stall now propagates to every
+data consumer -- a whole ring, both a2a neighbors, a permute receiver
+-- instead of pinning only the sending chip's chain: the honest
+failure mode.
 
 Fault surface: links and DMA engines are ordinary components, so
 ``hooks.FaultInjector`` can degrade a *single link* by name (e.g.
@@ -68,23 +73,32 @@ from .base import FabricBackend, FabricController
 class Xfer:
     """One transfer on one named link (parallel within a DmaStep).
 
-    ``dst_chip`` names the ring neighbor whose DMA engine consumes the
+    ``dst_chip`` names the consuming chip whose DMA engine receives the
     chunk (None for transfers without a modeled consumer, e.g. DCN or
     bisection aggregates): the link forwards a ``chunk`` notification
-    there, which the neighbor's matching step waits on.
+    there, which the consumer's matching step waits on.  ``dst_step``
+    tags which of the consumer's steps banks the chunk; None means
+    "same index as the producing step" (symmetric rings, where both
+    programs advance in lockstep) -- multi-hop collective-permute paths
+    of differing lengths set it explicitly.
     """
     link: str
     bytes: int
     dst_chip: typing.Optional[int] = None
+    dst_step: typing.Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)
 class DmaStep:
     """Parallel transfers + a post-step latency (hop / DCN one-way).
 
-    ``arrivals`` is the number of neighbor ``chunk`` notifications this
+    ``arrivals`` is the number of producer ``chunk`` notifications this
     step must collect (in addition to its own transfer acks) before the
-    program may advance -- the ring data dependency.
+    program may advance -- the collective data dependency.  A step with
+    no transfers, zero latency and ``arrivals > 0`` is a pure *arrival
+    gate* (a receiver waiting on inbound data, e.g. the closing step of
+    a collective-permute consumer): it costs no simulated time of its
+    own and completes the moment its chunks are banked.
     """
     xfers: tuple                  # tuple[Xfer, ...]; may be empty
     latency_ps: int = 0
@@ -222,7 +236,7 @@ class DmaEngine(Component):
         self.chip = chip
         self.legs = legs
         self.bus = self.port("bus")  # cached: hot on every step/ack
-        self._progs: dict = {}     # key -> [steps, idx]
+        self._progs: dict = {}     # key -> [steps, idx, final step idx]
         self._acks: dict = {}      # key -> outstanding xfer acks this step
         self._arrived: dict = {}   # (key, step idx) -> banked chunk count
         self._timed: set = set()   # keys waiting on a step_done timer
@@ -238,7 +252,16 @@ class DmaEngine(Component):
             req: Request = event.payload
             if req.kind == "exec":
                 _, key, steps = req.payload
-                self._progs[key] = [steps, 0]
+                # The *final* step for walltime accounting is the last
+                # one that costs simulated time (transfers or latency);
+                # trailing arrival gates ride for free, so the exec/done
+                # leg absorption stays on the step whose ack actually
+                # closes the program's time budget.
+                final = len(steps) - 1
+                while final >= 0 and not (steps[final].xfers
+                                          or steps[final].latency_ps > 0):
+                    final -= 1
+                self._progs[key] = [steps, 0, final]
                 self._start_step(key)
             elif req.kind == "xfer_done":
                 key = req.payload.key
@@ -258,7 +281,7 @@ class DmaEngine(Component):
         prog = self._progs.get(key)
         if prog is None or key in self._timed:
             return                 # late chunk for a finished/timed step
-        steps, idx = prog
+        steps, idx = prog[0], prog[1]
         if self._acks.get(key, 0) > 0:
             return
         step: DmaStep = steps[idx]
@@ -287,11 +310,16 @@ class DmaEngine(Component):
                              payload=(self.chip, key)))
 
     def _start_step(self, key) -> None:
-        steps, idx = self._progs[key]
+        steps, idx, final_idx = self._progs[key]
         step: DmaStep = steps[idx]
-        final = idx == len(steps) - 1
+        final = idx == final_idx
         legs = self.legs
         if not step.xfers:
+            if step.arrivals and not step.latency_ps:
+                # Arrival gate: no time of its own -- completes when the
+                # producers' chunks are banked (possibly already).
+                self._maybe_finish_step(key)
+                return
             # Timed step (no transfers): the latency is waited locally; a
             # final timed step also absorbs the exec/done legs so program
             # walltime stays exact.
@@ -312,7 +340,8 @@ class DmaEngine(Component):
         for x in step.xfers:
             bus.send(Request(
                 src=bus, dst=None, kind="xfer", size_bytes=int(x.bytes),
-                payload=_Xmit(x.link, self.chip, key, ack, x.dst_chip, idx)))
+                payload=_Xmit(x.link, self.chip, key, ack, x.dst_chip,
+                              idx if x.dst_step is None else x.dst_step)))
 
 
 class FabricXbar(Connection):
@@ -541,23 +570,53 @@ def decompose(topo, kind: str, B: float, group: typing.List[int]) -> dict:
                 else _block_steps(topo, group, n, B, 1))
     if kind == "all-to-all":
         if cls.startswith("ring"):
+            # Single exchange step, but with the same consumer
+            # dependency as the ring phases: each chip's step also waits
+            # for its two neighbors' chunks, so a failed link stalls the
+            # neighbors' programs, not just the sender's ack chain.  On
+            # a healthy symmetric ring the chunks arrive exactly when
+            # the chip's own acks do -- timing is unchanged.
             load = int(round(B * (n - 1) / 8))
             post = s_to_ps(n / 2 * c.ici_hop_latency_s)
-            return {d: [DmaStep((Xfer(_ici(topo, d, "+" + axis), load),
-                                 Xfer(_ici(topo, d, "-" + axis), load)),
-                                post)]
+            succ, pred = _ring_neighbors(topo, group, axis)
+            return {d: [DmaStep(
+                (Xfer(_ici(topo, d, "+" + axis), load, succ.get(d)),
+                 Xfer(_ici(topo, d, "-" + axis), load, pred.get(d))),
+                post, (d in succ) + (d in pred))]
                     for d in group}
         post = s_to_ps((topo.X / 2 + topo.Y / 2) * c.ici_hop_latency_s)
         return {d: [DmaStep(
             (Xfer(f"fabric.pod{topo.coords(d)[0]}.bisect",
                   int(round(B / 2))),), post)] for d in group}
     if kind == "collective-permute":
+        # Store-and-forward chain per (src -> dst) pair, plus the
+        # consumer dependency: the final hop forwards its chunk to the
+        # destination's DMA, whose program closes with an arrival gate.
+        # A fault anywhere on the path therefore stalls the *receiver*
+        # too.  Healthy walltime is unchanged: the gate is free, the
+        # chunk rides the final ack's own latency budget, and the
+        # collective still completes with the slowest send chain.
         hop = s_to_ps(c.ici_hop_latency_s)
         progs = {d: [] for d in group}
+        pairs = []
         for i, src in enumerate(group):
             dst = group[(i + 1) % n]
+            if dst == src:
+                continue
+            pairs.append((src, dst))
             progs[src] = [DmaStep((Xfer(link, int(round(B))),), hop)
                           for link in _torus_path(topo, src, dst)]
+        send_len = {d: len(progs[d]) for d in group}
+        for src, dst in pairs:
+            steps = progs[src]
+            if not steps:
+                continue
+            last = steps[send_len[src] - 1]
+            x = last.xfers[0]
+            steps[send_len[src] - 1] = DmaStep(
+                (Xfer(x.link, x.bytes, dst, send_len[dst]),),
+                last.latency_ps)
+            progs[dst].append(DmaStep((), 0, arrivals=1))
         return progs
     raise ValueError(f"unknown collective kind {kind!r}")
 

@@ -337,6 +337,51 @@ def test_transient_link_fault_stalls_whole_ring():
     assert slow.devices_done == 4
 
 
+def test_transient_link_fault_stalls_a2a_neighbors():
+    """The ring all-to-all's single exchange step carries the same
+    consumer dependency as the ring phases: the chunk lost to a
+    transient outage stalls the neighbors' programs too, so the
+    collective hangs with every member still in flight."""
+    rep = _sim("all-to-all", 4e6, [0, 1, 2, 3], "event", until_s=0.01,
+               faults={"fabric.pod0.ici[0,1]+x":
+                       [(1e-6, "transient", 20e-6)]})
+    assert rep.devices_done == 0
+    # healthy a2a still matches the analytic oracle exactly
+    a = _sim("all-to-all", 4e6, [0, 1, 2, 3], "analytic")
+    e = _sim("all-to-all", 4e6, [0, 1, 2, 3], "event")
+    assert abs(e.time_s - a.time_s) <= 1e-12
+
+
+def test_transient_link_fault_stalls_permute_receiver():
+    """A collective-permute receiver closes with an arrival gate fed by
+    the final hop of its producer's store-and-forward chain: losing any
+    hop of the path to a transient outage stalls the *receiver*, not
+    just the sender -- the collective never completes."""
+    group = [0, 1, 2, 3]
+    rep = _sim("collective-permute", 4e6, group, "event", until_s=0.01,
+               faults={"fabric.pod0.ici[0,1]+x":
+                       [(1e-6, "transient", 20e-6)]})
+    assert rep.devices_done == 0
+    # and the receiver (chip 2, fed by chip 1's chain over the faulted
+    # link) is pinned on its arrival gate, observable via progress()
+    sys_ = System(SPEC, fabric="event")
+    from repro.core.hooks import FaultInjector
+    inj = FaultInjector({"fabric.pod0.ici[0,1]+x":
+                         [(s_to_ps(1e-6), "transient", s_to_ps(20e-6))]})
+    for comp in sys_.fabric.fault_targets():
+        comp.accept_hook(inj)
+    op = _RunOp(kind="collective", name="cp",
+                coll_kind="collective-permute", bytes=4e6,
+                group=(tuple(group),))
+    sys_.load_trace([op], group)
+    sys_.run(until_s=0.01)
+    assert sys_.fabric.dmas[2].progress()    # receiver still in flight
+    # healthy permute timing is unchanged by the gate
+    a = _sim("collective-permute", 4e6, group, "analytic")
+    e = _sim("collective-permute", 4e6, group, "event")
+    assert abs(e.time_s - a.time_s) <= 1e-12
+
+
 def test_transient_fault_plan_at_simulate_level():
     """simulate()-level plan grammar: "transient" (fail + auto-recover
     after a duration, both in seconds) hangs the collective for good --

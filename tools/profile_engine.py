@@ -11,8 +11,13 @@ so perf PRs have a one-command, apples-to-apples baseline:
 
     python tools/profile_engine.py                      # serial throughput
     python tools/profile_engine.py --scheduler lookahead --workers 4
+    python tools/profile_engine.py --scheduler lookahead --executor procs
     python tools/profile_engine.py --profile --sort tottime --limit 25
     python tools/profile_engine.py --all                # every scheduler
+
+(``--profile`` with ``--executor procs`` profiles only the parent's
+routing/commit side -- handlers run in the shard workers; profile them
+under threads, where execution is in-process.)
 
 Wall-clock numbers here are what ``BENCH_fabric.json``'s ``replay``
 section tracks; the per-function table is what tells you *which* layer
@@ -37,9 +42,10 @@ from benchmarks.fabric_contention import SPEC, _tenant_ops  # noqa: E402
 from repro.core import System  # noqa: E402
 
 
-def build_system(scheduler: str, workers: int, tenants: int, rounds: int):
+def build_system(scheduler: str, workers: int, tenants: int, rounds: int,
+                 executor: str = None):
     system = System(SPEC, fabric="event", scheduler=scheduler,
-                    max_workers=workers)
+                    max_workers=workers, executor=executor)
     for tid in range(tenants):
         ops, devs = _tenant_ops(tid, rounds)
         system.load_trace(ops, devs)
@@ -47,19 +53,21 @@ def build_system(scheduler: str, workers: int, tenants: int, rounds: int):
 
 
 def run_once(args, scheduler: str) -> dict:
-    system = build_system(scheduler, args.workers, args.tenants, args.rounds)
+    executor = args.executor if scheduler != "serial" else None
+    system = build_system(scheduler, args.workers, args.tenants, args.rounds,
+                          executor=executor)
     t0 = time.perf_counter()
     system.run()
     wall = time.perf_counter() - t0
     eng = system.engine
-    return {"scheduler": scheduler, "wall_s": wall,
-            "events": eng.events_processed,
+    return {"scheduler": scheduler, "executor": executor or "-",
+            "wall_s": wall, "events": eng.events_processed,
             "events_per_sec": eng.events_processed / wall if wall else 0.0,
             "rounds": len(eng.window_widths or eng.batch_widths)}
 
 
 def print_row(r: dict) -> None:
-    print(f"{r['scheduler']:>10}  {r['wall_s']*1e3:9.1f} ms  "
+    print(f"{r['scheduler']:>10}/{r['executor']:<7}  {r['wall_s']*1e3:9.1f} ms  "
           f"{r['events']:7d} events  {r['events_per_sec']:10.0f} ev/s  "
           f"{r['rounds']:6d} rounds")
 
@@ -69,6 +77,10 @@ def main(argv=None) -> int:
         description="profile the engine over the event-fabric replay trace")
     ap.add_argument("--scheduler", default="serial",
                     choices=("serial", "batch", "lookahead"))
+    ap.add_argument("--executor", default=None,
+                    choices=("threads", "procs"),
+                    help="executor backend for round schedulers "
+                         "(default: threads; ignored for serial)")
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--tenants", type=int, default=4)
     ap.add_argument("--rounds", type=int, default=6,
@@ -88,7 +100,9 @@ def main(argv=None) -> int:
 
     if args.profile:
         system = build_system(args.scheduler, args.workers, args.tenants,
-                              args.rounds)
+                              args.rounds,
+                              executor=args.executor
+                              if args.scheduler != "serial" else None)
         prof = cProfile.Profile()
         prof.enable()
         system.run()

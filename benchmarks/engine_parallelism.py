@@ -1,69 +1,23 @@
-"""Fig. 2 analog — events executable concurrently per scheduler round.
+"""Thin alias -- the Fig. 2 width-distribution benchmark moved into
+:mod:`benchmarks.engine_scalability` (``run_width_distributions``).
 
-The paper plots how many same-time events the AES simulation schedules
-(60-100), arguing a conservative parallel engine has enough work for
-4-8 cores.  We replay the MGMark-analog traces on the system model and
-report two distributions side by side:
-
-* batch widths  — events per same-timestamp batch (the paper's DP-5
-  grouping, serial/batch schedulers);
-* window widths — events per lookahead window ``[t, t + min latency)``
-  (the conservative-PDES grouping of engine/lookahead.py).
-
-Window widths dominate batch widths whenever per-device timestamps
-diverge; on perfectly aligned SPMD traces they merge adjacent
-timestamps and still come out wider.
+Kept so ``python -m benchmarks.engine_parallelism`` and the historical
+``from benchmarks.engine_parallelism import synthetic_workload`` import
+both keep working.
 """
 from __future__ import annotations
 
 import sys
 
-import numpy as np
+from .engine_scalability import (_dist, run_width_distributions,
+                                 synthetic_workload)
 
-from repro.core import SystemSpec, simulate
-from repro.core.hlo import CollectiveRecord, HloCost, TraceOp
-
-
-def synthetic_workload(n_devices: int, layers: int = 12) -> HloCost:
-    """AES-analog: compute-heavy partitioned segments + periodic sync."""
-    cost = HloCost()
-    groups = [list(range(n_devices))]
-    for i in range(layers):
-        cost.trace.append(TraceOp("compute", f"seg{i}", flops=5e9,
-                                  hbm_bytes=2e8))
-        rec = CollectiveRecord("all-reduce", f"ar{i}", 1e6, int(1e6),
-                               int(1e6), groups)
-        cost.collectives.append(rec)
-        cost.trace.append(TraceOp("collective", f"ar{i}", collective=rec))
-    return cost
-
-
-def _dist(widths) -> str:
-    w = np.asarray(widths)
-    return (f"p50={np.percentile(w, 50):.0f}|p95={np.percentile(w, 95):.0f}"
-            f"|max={w.max()}")
+__all__ = ["synthetic_workload", "run_width_distributions"]
 
 
 def main() -> int:
     print("name,us_per_call,derived")
-    rep = rep_look = None
-    for n in (16, 64, 256):
-        spec = SystemSpec(pod_shape=(int(np.sqrt(n)), int(np.sqrt(n))))
-        cost = synthetic_workload(n)
-        rep = simulate(cost=cost, spec=spec, device_limit=None)
-        rep_look = simulate(cost=cost, spec=spec, device_limit=None,
-                            scheduler="lookahead")
-        assert rep_look.summary() == rep.summary(), "determinism violated"
-        bw = np.asarray(rep.batch_widths)
-        ww = np.asarray(rep_look.window_widths)
-        print(f"batch_width_mean_{n}dev,{bw.mean():.1f},{_dist(bw)}")
-        print(f"window_width_mean_{n}dev,{ww.mean():.1f},{_dist(ww)}")
-    # the paper's claim: enough parallelism for 4-8 cores
-    ok_batch = np.percentile(np.asarray(rep.batch_widths), 50) >= 8
-    ok_window = np.percentile(np.asarray(rep_look.window_widths), 50) >= 8
-    print(f"# median batch width supports >=8 workers: {ok_batch}")
-    print(f"# median window width supports >=8 workers: {ok_window}")
-    return 0
+    return run_width_distributions()
 
 
 if __name__ == "__main__":

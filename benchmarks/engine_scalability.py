@@ -1,7 +1,11 @@
-"""Fig. 8 analog — engine throughput across schedulers and worker counts.
+"""Fig. 2 + Fig. 8 analog — engine width and throughput across schedulers
+and worker counts.
 
-The paper reports 2.5-3.5x speedups from conservative parallel execution
-on 4 physical cores.  Two workloads, three schedulers:
+Absorbs the former ``benchmarks.engine_parallelism`` (Fig. 2 width
+distributions; ``synthetic_workload`` still importable from either
+module).  The paper reports 2.5-3.5x speedups from conservative parallel
+execution on 4 physical cores.  Two workloads, four schedulers (serial /
+batch / lookahead / bounded-lag):
 
 * **aligned** — the MGMark-analog SPMD trace replayed through the full
   system model.  All devices share timestamps, so same-timestamp
@@ -33,10 +37,70 @@ import numpy as np
 
 from repro.core import (Component, Connection, Engine, Request, SystemSpec,
                         simulate)
-from .engine_parallelism import synthetic_workload
+from repro.core.hlo import CollectiveRecord, HloCost, TraceOp
 
-SCHEDULERS = ("serial", "batch", "lookahead")
+SCHEDULERS = ("serial", "batch", "lookahead", "bounded")
 WORKER_COUNTS = (1, 2, 4)
+
+
+def synthetic_workload(n_devices: int, layers: int = 12) -> HloCost:
+    """AES-analog: compute-heavy partitioned segments + periodic sync."""
+    cost = HloCost()
+    groups = [list(range(n_devices))]
+    for i in range(layers):
+        cost.trace.append(TraceOp("compute", f"seg{i}", flops=5e9,
+                                  hbm_bytes=2e8))
+        rec = CollectiveRecord("all-reduce", f"ar{i}", 1e6, int(1e6),
+                               int(1e6), groups)
+        cost.collectives.append(rec)
+        cost.trace.append(TraceOp("collective", f"ar{i}", collective=rec))
+    return cost
+
+
+# -- Fig. 2 analog: events executable concurrently per scheduler round -------
+
+def _dist(widths) -> str:
+    w = np.asarray(widths)
+    return (f"p50={np.percentile(w, 50):.0f}|p95={np.percentile(w, 95):.0f}"
+            f"|max={w.max()}")
+
+
+def run_width_distributions() -> int:
+    """The paper plots how many same-time events the AES simulation
+    schedules (60-100), arguing a conservative parallel engine has
+    enough work for 4-8 cores.  Replay the MGMark-analog traces and
+    report batch widths (same-timestamp, DP-5) next to lookahead-window
+    widths side by side; window widths dominate whenever per-device
+    timestamps diverge.  (Formerly ``benchmarks.engine_parallelism``.)
+    """
+    rep = rep_look = None
+    for n in (16, 64, 256):
+        spec = SystemSpec(pod_shape=(int(np.sqrt(n)), int(np.sqrt(n))))
+        cost = synthetic_workload(n)
+        rep = simulate(cost=cost, spec=spec, device_limit=None)
+        rep_look = simulate(cost=cost, spec=spec, device_limit=None,
+                            scheduler="lookahead")
+        assert rep_look.summary() == rep.summary(), "determinism violated"
+        bw = np.asarray(rep.batch_widths)
+        ww = np.asarray(rep_look.window_widths)
+        print(f"batch_width_mean_{n}dev,{bw.mean():.1f},{_dist(bw)}")
+        print(f"window_width_mean_{n}dev,{ww.mean():.1f},{_dist(ww)}")
+    # the paper's claim: enough parallelism for 4-8 cores
+    ok_batch = np.percentile(np.asarray(rep.batch_widths), 50) >= 8
+    ok_window = np.percentile(np.asarray(rep_look.window_widths), 50) >= 8
+    print(f"# median batch width supports >=8 workers: {ok_batch}")
+    print(f"# median window width supports >=8 workers: {ok_window}")
+    return 0
+
+
+def _rounds(rep) -> int:
+    """Round count for any scheduler: window schedulers (lookahead,
+    bounded) record ``window_widths``, batch records ``batch_widths``;
+    serial has neither (every event is its own "round")."""
+    ww = getattr(rep, "window_widths", None) or ()
+    bw = getattr(rep, "batch_widths", None) or ()
+    return len(ww) or len(bw) or getattr(rep, "events", 0) or \
+        getattr(rep, "events_processed", 0)
 
 
 # -- aligned workload: full system model -------------------------------------
@@ -93,13 +157,24 @@ def run_fabric_bench(repeat: int = 3) -> list:
     for cfg in configs:
         fabric, sched, workers = cfg
         rep, wall = reports[cfg], walls[cfg]
-        rows.append({"fabric": fabric, "scheduler": sched,
-                     "workers": workers, "executor": rep.executor,
-                     "cpu_count": cpu, "wall_s": round(wall, 4),
-                     "events": rep.events,
-                     "events_per_sec": round(rep.events / wall)})
+        rounds = _rounds(rep)
+        serial_wall = walls[(fabric, "serial", 1)]
+        row = {"fabric": fabric, "scheduler": sched,
+               "workers": workers, "executor": rep.executor,
+               "cpu_count": cpu, "wall_s": round(wall, 4),
+               "events": rep.events,
+               "events_per_sec": round(rep.events / wall),
+               "rounds": rounds,
+               "rounds_per_sec": round(rounds / wall)}
+        if sched != "serial":
+            # per-round synchronization tax: wall-clock paid over the
+            # serial oracle, amortized across this scheme's rounds
+            row["sync_overhead_us_per_round"] = round(
+                1e6 * (wall - serial_wall) / rounds, 2)
+        rows.append(row)
         print(f"fabric_{fabric}_{sched}{workers},"
-              f"{1e6 * wall / rep.events:.2f},events={rep.events}")
+              f"{1e6 * wall / rep.events:.2f},events={rep.events}"
+              f"|rounds={rounds}")
     return rows
 
 
@@ -165,38 +240,44 @@ def _run_diverged(scheduler: str, workers: int, n: int = 32,
 
 def main() -> int:
     print("name,us_per_call,derived")
+    run_width_distributions()
     bench = {"workers": list(WORKER_COUNTS), "aligned": {}, "diverged": {}}
 
     # aligned: determinism + throughput at 4 workers (serial runs first
     # and doubles as the oracle the others must match bit-for-bit)
     rep_oracle = None
+    serial_wall = None
     for sched in SCHEDULERS:
         rep, wall = _run_aligned(sched)
         rep_oracle = rep_oracle or rep
+        serial_wall = serial_wall if serial_wall is not None else wall
         identical = rep.summary() == rep_oracle.summary()
         assert identical, f"{sched} diverged from serial on aligned trace"
         eps = rep.events / wall
-        widths = rep.window_widths if sched == "lookahead" else rep.batch_widths
+        rounds = _rounds(rep)
         print(f"engine_aligned_{sched}4,{1e6 * wall / rep.events:.2f},"
-              f"events_per_s={eps:.0f}|rounds={len(widths)}")
+              f"events_per_s={eps:.0f}|rounds={rounds}")
         bench["aligned"][sched] = {"wall_s": round(wall, 4),
                                    "events": rep.events,
                                    "events_per_sec": round(eps),
-                                   "rounds": len(widths)}
+                                   "rounds": rounds,
+                                   "rounds_per_sec": round(rounds / wall)}
+        if sched != "serial":
+            bench["aligned"][sched]["sync_overhead_us_per_round"] = round(
+                1e6 * (wall - serial_wall) / rounds, 2)
     w = np.asarray(rep_oracle.batch_widths)
     print(f"# aligned trace: median batch width "
           f"{np.percentile(w, 50):.0f} (paper Fig.2 range: 60-100)")
 
     # diverged: scaling curves; the Fig. 8 analog
-    oracle_state, oracle_end, _, _ = _run_diverged("serial", 1)
+    oracle_state, oracle_end, _, serial_div_wall = _run_diverged("serial", 1)
     for sched in SCHEDULERS:
         for workers in WORKER_COUNTS if sched != "serial" else (1,):
             state, end, eng, wall = _run_diverged(sched, workers)
             assert (state, end) == (oracle_state, oracle_end), \
                 f"{sched}@{workers} diverged from serial"
             eps = eng.events_processed / wall
-            rounds = (len(eng.window_widths) if sched == "lookahead"
-                      else len(eng.batch_widths))
+            rounds = _rounds(eng)
             print(f"engine_diverged_{sched}{workers},"
                   f"{1e6 * wall / eng.events_processed:.2f},"
                   f"events_per_s={eps:.0f}|rounds={rounds}")
@@ -204,9 +285,17 @@ def main() -> int:
                 round(wall, 4)
             bench["diverged"][sched][f"events_per_sec_{workers}"] = \
                 round(eps)
+            bench["diverged"][sched][f"rounds_{workers}"] = rounds
+            bench["diverged"][sched][f"rounds_per_sec_{workers}"] = \
+                round(rounds / wall)
+            if sched != "serial":
+                bench["diverged"][sched][
+                    f"sync_overhead_us_per_round_{workers}"] = round(
+                        1e6 * (wall - serial_div_wall) / rounds, 2)
 
     look4 = bench["diverged"]["lookahead"]["4"]
     batch4 = bench["diverged"]["batch"]["4"]
+    bounded4 = bench["diverged"]["bounded"]["4"]
     serial1 = bench["diverged"]["serial"]["1"]
     speedup = batch4 / look4
     bench["speedup_lookahead_vs_batch_4w"] = round(speedup, 2)
@@ -215,6 +304,10 @@ def main() -> int:
     bench["wall_serial_s"] = serial1
     bench["wall_lookahead4_s"] = look4
     bench["wall_ratio_lookahead4_over_serial"] = round(look4 / serial1, 2)
+    bench["wall_bounded4_s"] = bounded4
+    bench["wall_ratio_bounded4_over_serial"] = round(bounded4 / serial1, 2)
+    bench["rounds_lookahead4"] = bench["diverged"]["lookahead"]["rounds_4"]
+    bench["rounds_bounded4"] = bench["diverged"]["bounded"]["rounds_4"]
     bench["bit_identical"] = True
     print(f"# all schedulers bit-identical to serial: True")
     print(f"# lookahead vs batch wall-clock at 4 workers: {speedup:.2f}x "

@@ -14,8 +14,8 @@ import sys
 
 MODULES = [
     ("micro_validation", "Fig.6 — one-parameter micro-benchmarks"),
-    ("engine_parallelism", "Fig.2 — batch vs lookahead-window widths"),
-    ("engine_scalability", "Fig.8 — scheduler scaling -> BENCH_engine.json"),
+    ("engine_scalability",
+     "Fig.2+8 — widths + scheduler scaling -> BENCH_engine.json"),
     ("mgmark_validation", "Fig.7 — workload sim vs analytic bound"),
     ("case_study", "Fig.9 — U-mode vs D-mode traffic/time"),
     ("fault_tolerance", "straggler / failure / ckpt-interval what-ifs"),

@@ -10,10 +10,12 @@ from .event import (Event, EventQueue, ShardedEventQueue, LocalQueue,
 from .engine import (Engine, Scheduler, RoundScheduler, SCHEDULERS,
                      make_scheduler, register_scheduler, SerialScheduler,
                      BatchParallelScheduler, LookaheadScheduler,
+                     BoundedLagScheduler,
                      Executor, EXECUTORS, make_executor, register_executor,
                      ThreadExecutor, ProcExecutor)
 from .component import Component, Port
-from .connection import Connection, LinkConnection, LimitedConnection, Request
+from .connection import (Connection, LagNode, LinkConnection,
+                         LimitedConnection, Request)
 from .hooks import (Hook, HookCtx, Hookable, Tracer, MetricsHook, StallHook,
                     FaultInjector, EVENT_START, EVENT_END, REQ_SEND,
                     REQ_DELIVER, BUSY_INTERVAL)
@@ -35,8 +37,9 @@ __all__ = [
     "Executor", "EXECUTORS", "make_executor", "register_executor",
     "ThreadExecutor", "ProcExecutor",
     "SerialScheduler", "BatchParallelScheduler", "LookaheadScheduler",
+    "BoundedLagScheduler",
     "Component", "Port",
-    "Connection", "LinkConnection", "LimitedConnection", "Request",
+    "Connection", "LagNode", "LinkConnection", "LimitedConnection", "Request",
     "Hook", "HookCtx", "Hookable", "Tracer", "MetricsHook", "StallHook",
     "FaultInjector", "EVENT_START", "EVENT_END", "REQ_SEND", "REQ_DELIVER",
     "BUSY_INTERVAL",

@@ -46,6 +46,46 @@ class Request:
         return f"Request({self.kind}, {self.size_bytes}B)"
 
 
+class LagNode:
+    """One *refinement node* in the bounded-lag synchronization graph.
+
+    ``Connection.cluster_edges`` may use a LagNode wherever a cluster id
+    is expected.  A node belongs to ``cluster`` but represents only the
+    subset of that cluster's pending events matched by ``pred`` (an
+    ``Event -> bool`` predicate; ``None`` keeps the whole cluster), so
+    out-edges leaving the node promise a minimum delay for *that event
+    class only* -- e.g. "an in-flight serialization acks after >= ack_ps"
+    vs. "a queued transfer request must first serialize".  This is how a
+    connection states per-event-kind lookahead that the one-number
+    cluster edge cannot express (see ``Engine.cluster_graph``).
+
+    Soundness contract (the author's obligation, backstopped by the
+    strict-window guard): every cross-cluster event the connection can
+    create must be covered by *some* declared edge whose source node's
+    base is <= the causing event's time -- a pred-node path only
+    tightens the cover, it must never be the sole cover for traffic its
+    pred does not match.
+
+    ``inherit_inputs=True`` additionally copies every edge that *other*
+    connections aim at this node's cluster onto the node itself: a gate
+    that filters its own connection's inputs still conservatively
+    receives everything arriving from connections it knows nothing
+    about.
+    """
+
+    __slots__ = ("name", "cluster", "pred", "inherit_inputs")
+
+    def __init__(self, name: str, cluster: int, pred=None,
+                 inherit_inputs: bool = False) -> None:
+        self.name = name
+        self.cluster = cluster
+        self.pred = pred
+        self.inherit_inputs = inherit_inputs
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"LagNode({self.name}, cluster={self.cluster})"
+
+
 class Connection(Registered, Hookable):
     """Point/multi-point transport with fixed latency (on-chip fabric).
 
@@ -80,6 +120,36 @@ class Connection(Registered, Hookable):
         one sequential cluster.  A plain connection's send only posts
         events -- unless hooks are attached, which observe send order."""
         return self.hooks_active
+
+    def cluster_edges(self) -> typing.Iterable[tuple]:
+        """Directed cluster-graph edges this connection can carry events
+        over: ``(src, dst, min_latency_ps)`` triples whose endpoints are
+        cluster ids or :class:`LagNode` refinement nodes.
+
+        The bounded-lag scheduler derives each cluster's safe horizon
+        from the union of these edges over all non-fused connections
+        (see ``Engine.cluster_graph``), so the declaration must be a
+        *superset* of the traffic the connection can actually create --
+        under-declaring an edge makes the strict-window guard raise at
+        the first unsafe post, never silently corrupt determinism.
+
+        The default is the conservative clique over the endpoint
+        owners' clusters at ``min_latency_ps``: correct for any
+        connection, but shared many-endpoint connections should
+        override it with their true routing graph (see
+        ``StarConnection`` and ``FabricXbar``) -- a clique through one
+        shared bus couples every cluster to the global minimum and
+        degenerates bounded lag back into the global barrier.
+
+        Only called after ``Engine.compute_clusters`` has annotated
+        ``cluster_id``; self-edges are ignored by the consumer.
+        """
+        lat = self.min_latency_ps
+        cids = sorted({p.owner.cluster_id for p in self.endpoints})
+        for a in cids:
+            for b in cids:
+                if a != b:
+                    yield (a, b, lat)
 
     # -- protocol -----------------------------------------------------------
     def can_accept(self, src_port) -> bool:

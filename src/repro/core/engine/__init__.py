@@ -13,7 +13,7 @@ from .executor import (Executor, EXECUTORS, make_executor,
                        register_executor, ThreadExecutor, ProcExecutor)
 from .serial import SerialScheduler
 from .batch import BatchParallelScheduler
-from .lookahead import LookaheadScheduler
+from .lookahead import LookaheadScheduler, BoundedLagScheduler
 
 __all__ = [
     "Engine", "Scheduler", "RoundScheduler", "SCHEDULERS",
@@ -21,4 +21,5 @@ __all__ = [
     "Executor", "EXECUTORS", "make_executor", "register_executor",
     "ThreadExecutor", "ProcExecutor",
     "SerialScheduler", "BatchParallelScheduler", "LookaheadScheduler",
+    "BoundedLagScheduler",
 ]

@@ -58,11 +58,44 @@ import threading
 import typing
 import warnings
 
-from heapq import heappop as _heappop
+from heapq import heapify as _heapify, heappop as _heappop, \
+    heappush as _heappush
 
+from ..connection import LagNode
 from ..event import Event, EventQueue, LocalQueue, ShardedEventQueue
 from ..hooks import Hookable, EVENT_START, EVENT_END
 from .executor import make_executor
+
+_INF = float("inf")                         # unbounded window / idle cluster
+
+
+class LagGraph:
+    """The bounded-lag synchronization graph at node granularity.
+
+    The first ``n_clusters`` node indices are the clusters themselves
+    (index == cluster id, base = the cluster's earliest pending event);
+    indices beyond that are :class:`~repro.core.connection.LagNode`
+    refinements whose base is the earliest pending event matching the
+    node's predicate (``inf`` when nothing matches).  ``out`` feeds the
+    earliest-input-time relaxation; ``horizon_in[c]`` holds only the
+    *inter-cluster* in-edges that bound cluster ``c``'s horizon --
+    intra-cluster node edges (e.g. a link's queued-transfer node to its
+    in-flight node) participate in the relaxation but are not horizons
+    themselves.
+    """
+
+    __slots__ = ("n_clusters", "n_nodes", "nodes_cluster", "out",
+                 "horizon_in", "pred_scans", "plain_nodes")
+
+    def __init__(self, n_clusters, nodes_cluster, out, horizon_in,
+                 pred_scans, plain_nodes) -> None:
+        self.n_clusters = n_clusters
+        self.n_nodes = len(nodes_cluster)
+        self.nodes_cluster = nodes_cluster  # node index -> cluster id
+        self.out = out                      # node -> [(node, lat)]
+        self.horizon_in = horizon_in        # cluster -> [(node, lat)]
+        self.pred_scans = pred_scans        # [(cluster, [(node, pred)])]
+        self.plain_nodes = plain_nodes      # pred-less nodes: [(node, cluster)]
 
 
 def guarded_push(engine: "Engine", queue) -> typing.Callable:
@@ -356,6 +389,101 @@ class Engine(Hookable):
                 best = lat
         return best
 
+    def cluster_graph(self) -> "LagGraph":
+        """Directed min-latency graph between clusters -- the bounded-lag
+        synchronization graph.
+
+        Where :meth:`min_cross_cluster_latency_ps` collapses the whole
+        topology into one number (the global-barrier window), this keeps
+        the structure: each non-fused connection declares which cluster
+        pairs it can actually carry events between and at what minimum
+        delay (:meth:`~repro.core.connection.Connection.cluster_edges`;
+        shared buses override the clique default with their routing
+        graph).  A cluster's safe horizon is then derived from its
+        *in-neighbors* only, so clusters that never exchange events do
+        not synchronize at all.
+
+        Edge endpoints may be :class:`~repro.core.connection.LagNode`
+        refinements: extra graph nodes covering only the events matching
+        the node's predicate, so a connection can promise different
+        minimum delays for different event classes within one cluster
+        (see the :class:`FabricXbar` link queue/wire split).
+
+        Must be called after :meth:`compute_clusters`.  Parallel edges
+        collapse to their minimum; *inter-cluster* latencies clamp to
+        >= 1 tick so every horizon strictly exceeds its inputs (progress
+        guarantee), while intra-cluster node edges may carry 0.
+        """
+        fused = getattr(self, "_fused_connections", set())
+        ncl = 0
+        for item in self._components:
+            if item.cluster_id >= ncl:
+                ncl = item.cluster_id + 1
+        nodes_cluster = list(range(ncl))    # default node per cluster
+        preds: list = [None] * ncl
+        node_ix: dict = {}                  # id(LagNode) -> node index
+        inherit: list = []                  # (node, cluster, author rank)
+        edges: list = []                    # (u, v, lat, author rank)
+
+        def resolve(end, author):
+            if not isinstance(end, LagNode):
+                return end
+            ix = node_ix.get(id(end))
+            if ix is None:
+                ix = len(nodes_cluster)
+                node_ix[id(end)] = ix
+                nodes_cluster.append(end.cluster)
+                preds.append(end.pred)
+                if end.inherit_inputs:
+                    inherit.append((ix, end.cluster, author))
+            return ix
+
+        for item in self._components:
+            if getattr(item, "endpoints", None) is None:
+                continue
+            if item.rank in fused:
+                continue
+            for src, dst, lat in item.cluster_edges():
+                u = resolve(src, item.rank)
+                v = resolve(dst, item.rank)
+                if u != v:
+                    edges.append((u, v, lat, item.rank))
+        # A gate node only filters traffic its own connection understands;
+        # whatever *other* connections aim at its cluster it must receive
+        # unfiltered (copied onto the node, authorship-excluded).
+        for ix, cluster, author in inherit:
+            edges.extend((u, ix, lat, a) for (u, v, lat, a) in tuple(edges)
+                         if v == cluster and a != author)
+        best: dict = {}
+        for u, v, lat, _a in edges:
+            if nodes_cluster[u] != nodes_cluster[v]:
+                if lat < 1:
+                    lat = 1
+            elif lat < 0:
+                lat = 0
+            key = (u, v)
+            cur = best.get(key)
+            if cur is None or lat < cur:
+                best[key] = lat
+        nn = len(nodes_cluster)
+        out = [[] for _ in range(nn)]
+        horizon_in = [[] for _ in range(ncl)]
+        for (u, v), lat in sorted(best.items()):
+            out[u].append((v, lat))
+            cv = nodes_cluster[v]
+            if nodes_cluster[u] != cv:
+                horizon_in[cv].append((u, lat))
+        by_cluster: dict = {}
+        plain: list = []
+        for ix in range(ncl, nn):
+            if preds[ix] is not None:
+                by_cluster.setdefault(nodes_cluster[ix], []).append(
+                    (ix, preds[ix]))
+            else:
+                plain.append((ix, nodes_cluster[ix]))
+        return LagGraph(ncl, nodes_cluster, out, horizon_in,
+                        sorted(by_cluster.items()), plain)
+
 
 # -- shared round machinery ---------------------------------------------------
 
@@ -375,9 +503,9 @@ class _GroupCtx:
     adopting the cluster's shard slice wholesale.
     """
 
-    __slots__ = ("sched", "group_id", "window_end", "local", "posts",
-                 "executed", "max_time", "_adopted", "_entry", "_post_idx",
-                 "_defer", "_strict")
+    __slots__ = ("sched", "group_id", "window_end", "horizons", "local",
+                 "posts", "executed", "max_time", "_adopted", "_entry",
+                 "_post_idx", "_defer", "_strict")
 
     _IDLE_ENTRY = (0, 0, 0, 0, None)
 
@@ -385,6 +513,10 @@ class _GroupCtx:
         self.sched = sched
         self.group_id = group_id
         self.window_end = 0
+        # Per-cluster safe horizons of the current bounded-lag wave
+        # (shared list, indexed by cluster id); None under a global
+        # barrier, where every cluster shares this context's window_end.
+        self.horizons = None
         self.local = LocalQueue()           # in-window posts only (side heap)
         self.posts: list = []               # (entry stamp, idx, event)
         self.executed = 0
@@ -429,17 +561,38 @@ class _GroupCtx:
                 return
             if (self._strict
                     and event.component.cluster_id != self.group_id):
-                raise RuntimeError(
-                    f"lookahead safety violation: {event!r} targets another "
-                    f"cluster inside the window ending at {self.window_end}; "
-                    "route cross-component traffic through a Connection with "
-                    "latency >= the engine's lookahead window")
+                # Global barrier: any cross-cluster post inside the
+                # shared window is unsafe.  Bounded lag: unsafe only
+                # below the *target's* horizon -- own-window arrival is
+                # legitimate when the target lags behind this cluster.
+                h = self.horizons
+                if h is None or event.time < h[event.component.cluster_id]:
+                    self._unsafe_post(event)
+        elif self._strict and self.horizons is not None:
+            # Beyond own window but possibly below the target's horizon:
+            # reachable only through an edge the connection failed to
+            # declare in ``cluster_edges`` (or a send cheating its own
+            # ``min_latency_ps``) -- fail loudly, never corrupt.
+            cid = event.component.cluster_id
+            if cid != self.group_id and event.time < self.horizons[cid]:
+                self._unsafe_post(event)
         # The executing event's heap entry doubles as the post stamp:
         # (entry, idx) sorts exactly like the serial post order
         # (time, gen, rank, seq, intra-handler index), and the tuple
         # comparison can never reach the entry's event field because
         # seqs are unique -- zero allocations beyond the triple.
         self.posts.append((self._entry, idx, event))
+
+    def _unsafe_post(self, event: Event) -> None:
+        h = self.horizons
+        bound = (self.window_end if h is None
+                 else h[event.component.cluster_id])
+        raise RuntimeError(
+            f"lookahead safety violation: {event!r} targets another "
+            f"cluster before its safe horizon {bound}; route "
+            "cross-component traffic through a Connection with latency "
+            ">= the engine's lookahead window (and with the edge "
+            "declared in cluster_edges under bounded lag)")
 
     def execute(self) -> "_GroupCtx":
         """Drain the round: a two-stream merge of the adopted slice
@@ -527,6 +680,12 @@ class RoundScheduler(Scheduler):
     use_pool = False
     strict_window = False
     record_window_widths = False
+    # Bounded-lag mode: drop the global round barrier and give every
+    # cluster its own conservative horizon derived from the cluster
+    # graph (``Engine.cluster_graph``).  ``run`` then dispatches to
+    # :meth:`_run_bounded` -- per-cluster windows, stamp-staged commit
+    # with seq assignment deferred to each shard's flush.
+    bounded_lag = False
     # Executor backend (name or instance) resolved in ``prepare``.  The
     # "threads" default keeps state in-process, which is what allows
     # the adaptive merged/degenerate inline paths below; backends with
@@ -577,12 +736,18 @@ class RoundScheduler(Scheduler):
         self._merged = _MergedCtx(self, -1)
         self._merged.push_global = eng.queue.push
         self._commit: list = []             # reused per-round post buffer
+        if self.bounded_lag:
+            self._lag_graph = eng.cluster_graph()
+            self._staged = [[] for _ in range(nshards)]
+            self._horizons = [0] * nshards
         self.executor = make_executor(self.executor_spec,
                                       max_workers=self.max_workers)
         self.executor.bind(self)
         self.executor.prepare(self._ctxs)
 
     def run(self, until_ps: int = None) -> int:
+        if self.bounded_lag:
+            return self._run_bounded(until_ps)
         eng = self.engine
         self.prepare()
         queue = eng.queue
@@ -711,10 +876,222 @@ class RoundScheduler(Scheduler):
             executor.finalize(failed=failed)
         return eng.now
 
+    # -- bounded lag ----------------------------------------------------------
+    def _compute_horizons(self, lvt: list) -> list:
+        """Per-cluster safe execution horizons for one wave.
+
+        ``lvt[i]`` is cluster i's earliest pending event time (shard
+        head or staged in-flight post; ``inf`` when idle).  The classic
+        conservative earliest-input-time relaxation runs a multi-source
+        shortest path over the cluster graph::
+
+            eit[i] = min(lvt[i], min over in-edges j->i of eit[j] + L)
+
+        which bounds, transitively through idle clusters, the earliest
+        time *any* chain of future events could make cluster i execute.
+        Cluster i may then safely run every event strictly below::
+
+            H[i] = min over in-edges j->i of (eit[j] + L[j->i])
+
+        because an event posted by cluster j executing at ``tau >=
+        eit[j]`` arrives at ``tau + L >= H[i]`` -- nothing can appear
+        inside the window being executed.  The globally earliest
+        cluster always gets ``H > lvt`` (inter-cluster latencies are
+        >= 1), so every wave makes progress; clusters with no in-edges
+        are unbounded.
+
+        The relaxation runs over the *node-level* graph: beyond the
+        per-cluster default nodes (base = lvt), connections may have
+        declared predicate-refined nodes whose base is the earliest
+        pending event *matching the predicate* -- a link's in-flight
+        serialization vs. its still-queued transfer requests, the
+        controller's non-completion inputs.  Pred bases come from one
+        read-only scan of the owning shard's heap plus its staged
+        posts, done only for clusters that declared refinements.
+        """
+        g = self._lag_graph
+        ncl = g.n_clusters
+        eit = list(lvt)
+        if g.n_nodes > ncl:
+            eit.extend(_INF for _ in range(ncl, g.n_nodes))
+            for ix, cid in g.plain_nodes:   # pred-less waypoints
+                eit[ix] = lvt[cid]
+            shards = self.engine.queue._shards  # read-only heap scan
+            staged = self._staged
+            for cid, members in g.pred_scans:
+                for e in shards[cid]:
+                    t, ev = e[0], e[4]
+                    for ix, pred in members:
+                        if t < eit[ix] and pred(ev):
+                            eit[ix] = t
+                for p in staged[cid]:
+                    ev = p[2]
+                    t = ev.time
+                    for ix, pred in members:
+                        if t < eit[ix] and pred(ev):
+                            eit[ix] = t
+        out_edges = g.out
+        heap = [(t, i) for i, t in enumerate(eit) if t != _INF]
+        _heapify(heap)
+        while heap:
+            d, i = _heappop(heap)
+            if d > eit[i]:
+                continue
+            for j, lat in out_edges[i]:
+                nd = d + lat
+                if nd < eit[j]:
+                    eit[j] = nd
+                    _heappush(heap, (nd, j))
+        horizons = self._horizons
+        for i, edges in enumerate(g.horizon_in):
+            h = _INF
+            for j, lat in edges:
+                b = eit[j] + lat
+                if b < h:
+                    h = b
+            horizons[i] = h
+        return horizons
+
+    def _run_bounded(self, until_ps: int = None) -> int:
+        """Bounded-lag drain: per-cluster windows, no global barrier.
+
+        Each wave computes every cluster's horizon, then runs *all*
+        clusters with work below their horizon concurrently -- a
+        decoupled cluster may advance far beyond the global floor while
+        a laggard catches up, synchronizing only with the clusters it
+        actually exchanges events with.
+
+        Bit-identity is preserved by deferring seq assignment: a wave's
+        beyond-window / cross-cluster posts are *staged* per destination
+        shard still carrying only their serial post-order stamps, and a
+        shard's staged posts are flushed (stamp-sorted, seqs assigned,
+        pushed) only once the shard's horizon passes their arrival time
+        -- at which point conservatism guarantees every same-(time,
+        rank) competitor has already been staged, so per-shard seq order
+        equals serial's.  Cross-shard seq skew is unobservable (the
+        seq-locality argument on ``ShardedEventQueue``).
+
+        The merged / degenerate inline paths are structurally disabled:
+        they assign seqs at post time, which is only serial-equivalent
+        when all clusters share one floor.  Narrow waves instead run
+        grouped-inline on the executor (the thread backend executes
+        small rounds on the scheduler thread anyway).
+        """
+        eng = self.engine
+        self.prepare()
+        queue = eng.queue
+        ctxs = self._ctxs
+        staged = self._staged
+        executor = self.executor
+        record_widths = self.record_window_widths
+        record_groups = self.record_group_sizes
+        nsh = len(ctxs)
+        shard_head = queue.shard_head_time
+        pop_shard = queue.pop_shard_window
+        push = queue.push
+        lvt = [0] * nsh
+        now_max = eng._now_global
+        failed = True
+        try:
+            while True:
+                floor = _INF
+                for sid in range(nsh):
+                    t = shard_head(sid)
+                    t = _INF if t is None else t
+                    for p in staged[sid]:
+                        pt = p[2].time
+                        if pt < t:
+                            t = pt
+                    lvt[sid] = t
+                    if t < floor:
+                        floor = t
+                if floor == _INF:
+                    break
+                if until_ps is not None and floor > until_ps:
+                    break
+                eng.now = floor
+                horizons = self._compute_horizons(lvt)
+                if until_ps is not None:
+                    cap = until_ps + 1
+                    for i in range(nsh):
+                        if horizons[i] > cap:
+                            horizons[i] = cap
+
+                tasks = []
+                nev = 0
+                for sid in range(nsh):
+                    hzn = horizons[sid]
+                    s = staged[sid]
+                    if s:
+                        due = [p for p in s if p[2].time < hzn]
+                        if due:
+                            if len(due) == len(s):
+                                s.clear()
+                            else:
+                                s[:] = [p for p in s if p[2].time >= hzn]
+                            due.sort()  # stamp order == serial seq order
+                            for p in due:
+                                push(p[2])
+                    entries = pop_shard(sid, hzn)
+                    if entries:
+                        ctx = ctxs[sid]
+                        ctx.begin(hzn, entries)
+                        ctx.horizons = horizons
+                        tasks.append(ctx)
+                        nev += len(entries)
+                assert tasks, "bounded-lag wave made no progress"
+
+                executor.run_round(tasks, nev)
+
+                executed = 0
+                tmax = floor
+                for ctx in tasks:
+                    executed += ctx.executed
+                    if ctx.max_time > tmax:
+                        tmax = ctx.max_time
+                eng.events_processed += executed
+                eng.batch_widths.append(executed)
+                if record_widths:
+                    eng.window_widths.append(executed)
+                if record_groups:
+                    eng.round_group_sizes.append(
+                        tuple((ctx.group_id, ctx.executed)
+                              for ctx in tasks))
+
+                # Stage (don't push) this wave's posts per destination
+                # shard; the flush above assigns seqs when it is safe.
+                for ctx in tasks:
+                    posts = ctx.posts
+                    if posts:
+                        for p in posts:
+                            staged[p[2].component.cluster_id].append(p)
+                        posts.clear()
+                if tmax > now_max:
+                    now_max = tmax
+            failed = False
+        finally:
+            # Return undelivered staged posts to the queue so pending
+            # state is all queue-resident (partial runs resume; the
+            # procs backend materializes payload refs off the queue).
+            # Safe: at exit nothing executed past ``until_ps`` and
+            # every future stamp exceeds the ones flushed here.
+            rem = []
+            for s in staged:
+                rem.extend(s)
+                s.clear()
+            if rem:
+                rem.sort()
+                for p in rem:
+                    push(p[2])
+            executor.finalize(failed=failed)
+        eng.now = now_max
+        return now_max
+
     def describe(self) -> dict:
         d = super().describe()
         d["executor"] = (self.executor.describe() if self.executor
                          is not None else self.executor_spec)
+        d["bounded_lag"] = self.bounded_lag
         return d
 
 

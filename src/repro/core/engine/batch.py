@@ -29,6 +29,10 @@ class BatchParallelScheduler(RoundScheduler):
     # RoundScheduler defaults provide the rest of DP-5: one-tick windows
     # (same-timestamp batches) with every post deferred to the commit,
     # per-cluster grouping, and the cluster-sharded event queue.
+    # ``bounded_lag`` stays False: the paper's scheme is *defined* by
+    # the global same-timestamp barrier -- removing it turns this into
+    # the bounded scheduler (``scheduler="bounded"``), which subsumes
+    # batch whenever per-cluster horizons are wanted.
 
 
 register_scheduler("batch", BatchParallelScheduler)

@@ -15,11 +15,16 @@ assignment the thread pool uses -- and from then on that worker's
 replica of the cluster's components is the *authoritative* one: the
 parent's copies go stale until the end-of-run state sync.
 
-**Per round** (one duplex pipe per worker, plain-pickled envelopes of
-ints/strings/bytes):
+**Per round** (plain-pickled envelopes of ints/strings/bytes; carried
+over shared-memory rings when :mod:`rings` is available, else over the
+worker's duplex pipe -- same frames either way):
 
 * parent -> worker: the window's event entries for each of the worker's
-  clusters -- ``(time, rank, seq, kind, payload-ref)`` tuples.
+  clusters -- ``(sid, window_end, (time, rank, seq, kind, payload-ref)
+  tuples)`` groups, plus the wave's shared per-cluster ``horizons``
+  list (``None`` under a global-barrier scheduler).  Per-group window
+  ends are what lets the bounded-lag scheduler run clusters at
+  *different* horizons within one exchange.
 * worker: runs the ordinary ``_GroupCtx`` machinery (local side-heap,
   generation bookkeeping, strict-window guard) over its clusters;
   handlers mutate shard-resident state with no locks and no GIL
@@ -58,25 +63,26 @@ keep only parent-side observations -- see docs/engine.md for the exact
 residency rules.
 
 A worker that dies mid-run surfaces as a ``RuntimeError`` naming the
-worker (EOF on its pipe), never a hang: each child closes every pipe
-end it does not own, so the parent sees EOF the moment the process
-exits.  Worker-side exceptions (including the lookahead strict-window
-guard) travel back with their traceback and re-raise in the parent.
+worker, never a hang: on the pipe transport each child closes every
+pipe end it does not own, so the parent sees EOF the moment the
+process exits; on the ring transport every blocking ring operation
+runs a liveness ``deadcheck`` (the parent polls the worker process,
+the worker polls its parent pid) once it leaves the hot spin.
+Worker-side exceptions (including the lookahead strict-window guard)
+travel back with their traceback and re-raise in the parent.
 """
 from __future__ import annotations
 
 import multiprocessing
 import os
-import pickle
 import traceback
 
-from . import wire
+from . import rings, wire
 from .base import Executor, register_executor
 from ...event import Event
 
-
-def _plain_dumps(obj) -> bytes:
-    return pickle.dumps(obj, pickle.HIGHEST_PROTOCOL)
+_plain_dumps = wire.plain_dumps
+_plain_loads = wire.plain_loads
 
 
 class _Ref:
@@ -95,14 +101,14 @@ class _Ref:
 class _WorkerState:
     """Shard-worker side of the protocol (lives in the forked child)."""
 
-    def __init__(self, sched, wid: int, nprocs: int, conn) -> None:
+    def __init__(self, sched, wid: int, nprocs: int, send) -> None:
         from ..base import _GroupCtx      # late: avoid import cycle
         self._GroupCtx = _GroupCtx
         self.sched = sched
         self.eng = sched.engine
         self.wid = wid
         self.nprocs = nprocs
-        self.conn = conn
+        self.send = send                  # reply-bytes sink (ring or pipe)
         self.ctxs: dict = {}              # cluster id -> _GroupCtx (lazy)
         self.local: dict = {}             # key -> parked own-cluster payload
         self.local_seq = 0
@@ -186,24 +192,25 @@ class _WorkerState:
         return out
 
     # -- message handlers --------------------------------------------------
-    def round(self, wend, groups, blobs) -> None:
+    def round(self, groups, blobs, horizons) -> None:
         for src_wid, seq, blob_bytes, count in blobs:
             self.blobs[(src_wid, seq)] = [wire.loads(blob_bytes, self.eng),
                                           count]
         out = []
         cross: dict = {}
-        for sid, wire_entries in groups:
+        for sid, wend, wire_entries in groups:
             ctx = self.ctxs.get(sid)
             if ctx is None:
                 ctx = self.ctxs[sid] = self._GroupCtx(self.sched, sid)
             ctx.begin(wend, self._decode_entries(wire_entries))
+            ctx.horizons = horizons       # bounded lag: target-cluster guard
             ctx.execute()
             posts = self._encode_posts(ctx.posts, cross)
             ctx.posts.clear()
             out.append((sid, ctx.executed, ctx.max_time, posts))
         wired = [(dst, seq, wire.dumps(batch, self.eng), len(batch))
                  for dst, (seq, batch) in cross.items()]
-        self.conn.send_bytes(_plain_dumps(("D", out, wired)))
+        self.send(_plain_dumps(("D", out, wired)))
 
     def collect(self) -> None:
         state = {c.rank: c.shard_state() for c in self.eng._components
@@ -217,12 +224,13 @@ class _WorkerState:
         # those references so a later run (with fresh workers) finds
         # real objects, not dangling cache keys.
         stranded_blobs = {k: v[0] for k, v in self.blobs.items()}
-        self.conn.send_bytes(wire.dumps(
+        self.send(wire.dumps(
             ("S", state, hooks, comp_hooks, self.local, stranded_blobs),
             self.eng))
 
 
-def _worker_main(sched, wid: int, nprocs: int, child_ends, parent_ends):
+def _worker_main(sched, wid: int, nprocs: int, child_ends, parent_ends,
+                 ring_pairs):
     """Shard worker loop (runs in the forked child)."""
     for p in parent_ends:
         p.close()
@@ -230,11 +238,29 @@ def _worker_main(sched, wid: int, nprocs: int, child_ends, parent_ends):
         if i != wid:
             c.close()
     conn = child_ends[wid]
-    state = _WorkerState(sched, wid, nprocs, conn)
+    ring = None
+    if ring_pairs is not None:
+        for i, pair in enumerate(ring_pairs):
+            if i != wid:
+                pair.close()
+        ring = ring_pairs[wid]
+        ppid = os.getppid()
+
+        def _parent_gone() -> None:
+            # An orphaned worker must not spin on a ring no one feeds;
+            # the pipe transport gets this for free via EOF.
+            if os.getppid() != ppid:
+                os._exit(1)
+
+        ring.req.deadcheck = ring.rsp.deadcheck = _parent_gone
+        recv, send = ring.req.recv_bytes, ring.rsp.send_bytes
+    else:
+        recv, send = conn.recv_bytes, conn.send_bytes
+    state = _WorkerState(sched, wid, nprocs, send)
     try:
         while True:
             try:
-                msg = pickle.loads(conn.recv_bytes())
+                msg = _plain_loads(recv())
             except EOFError:
                 break
             op = msg[0]
@@ -246,7 +272,7 @@ def _worker_main(sched, wid: int, nprocs: int, child_ends, parent_ends):
                 elif op == "Q":
                     break
             except BaseException:
-                conn.send_bytes(_plain_dumps(("E", traceback.format_exc())))
+                send(_plain_dumps(("E", traceback.format_exc())))
     except (BrokenPipeError, KeyboardInterrupt):
         pass
     finally:
@@ -266,6 +292,8 @@ class ProcExecutor(Executor):
         self.processes = self._max_procs
         self._procs: list = []
         self._conns: list = []
+        self._rings = None                # list[RingPair] when in use
+        self.transport = "pipes"
         self._msgs: dict = {}             # reused per-round send buffer
         self._pending_blobs: dict = {}    # dst wid -> blobs awaiting routing
 
@@ -283,15 +311,33 @@ class ProcExecutor(Executor):
         self._conns = parent_ends
         self._procs = []
         self._pending_blobs = {}
+        # Round traffic rides shared-memory rings when the host has
+        # them (created before the fork so children inherit the
+        # mapping); the pipes stay open as the fallback transport and
+        # for EOF-based death detection in either direction.
+        self._rings = ([rings.RingPair() for _ in range(nprocs)]
+                       if rings.available() else None)
+        self.transport = "rings" if self._rings else "pipes"
         for wid in range(nprocs):
             proc = mp.Process(
                 target=_worker_main,
-                args=(self.scheduler, wid, nprocs, child_ends, parent_ends),
+                args=(self.scheduler, wid, nprocs, child_ends, parent_ends,
+                      self._rings),
                 daemon=True, name=f"shard-worker-{wid}")
             proc.start()
             self._procs.append(proc)
         for c in child_ends:
             c.close()
+        if self._rings:
+            for wid, pair in enumerate(self._rings):
+                pair.req.deadcheck = pair.rsp.deadcheck = \
+                    self._make_deadcheck(wid)
+
+    def _make_deadcheck(self, wid: int):
+        def check() -> None:
+            if not self._procs[wid].is_alive():
+                raise rings.PeerGone(wid)
+        return check
 
     def run_round(self, tasks: list, nev: int) -> None:
         eng = self.scheduler.engine
@@ -300,13 +346,16 @@ class ProcExecutor(Executor):
         msgs = self._msgs
         msgs.clear()
         for ctx in tasks:
-            group = (ctx.group_id, _encode_entries(ctx._adopted, eng))
+            group = (ctx.group_id, ctx.window_end,
+                     _encode_entries(ctx._adopted, eng))
             msgs.setdefault(ctx.group_id % nprocs, []).append(group)
         ctxs = {ctx.group_id: ctx for ctx in tasks}
-        wend = tasks[0].window_end
+        # All ctxs of a wave share one horizons list (None under a
+        # global-barrier scheduler); ship it once per worker message.
+        horizons = tasks[0].horizons
         pending = self._pending_blobs
         for wid, groups in msgs.items():
-            self._send(wid, ("R", wend, groups, pending.pop(wid, ())))
+            self._send(wid, ("R", groups, pending.pop(wid, ()), horizons))
         for wid in msgs:
             reply = self._recv(wid)
             if reply[0] == "E":
@@ -330,10 +379,10 @@ class ProcExecutor(Executor):
             if not failed and self._conns:
                 self._collect()
         finally:
-            for conn in self._conns:
+            for wid in range(len(self._conns)):
                 try:
-                    conn.send_bytes(_plain_dumps(("Q",)))
-                except OSError:
+                    self._send(wid, ("Q",))
+                except (OSError, RuntimeError):
                     pass
             for proc in self._procs:
                 proc.join(timeout=5)
@@ -341,8 +390,13 @@ class ProcExecutor(Executor):
                     proc.terminate()
             for conn in self._conns:
                 conn.close()
+            if self._rings:
+                for pair in self._rings:
+                    pair.close()
+                    pair.unlink()
             self._procs = []
             self._conns = []
+            self._rings = None
 
     def _collect(self) -> None:
         """Sync shard-resident state (and mergeable engine hooks) back
@@ -396,17 +450,28 @@ class ProcExecutor(Executor):
                 else:                     # ("B", src wid, seq, idx)
                     ev.payload = blob_items[(ref[1], ref[2])][ref[3]]
 
-    # -- pipe helpers ------------------------------------------------------
+    # -- transport helpers -------------------------------------------------
     def _send(self, wid: int, msg) -> None:
+        if self._rings is not None:
+            try:
+                self._rings[wid].req.send_bytes(_plain_dumps(msg))
+            except rings.PeerGone:
+                self._died(wid)
+            return
         try:
             self._conns[wid].send_bytes(_plain_dumps(msg))
         except OSError:
             self._died(wid)
 
     def _recv(self, wid: int):
-        return pickle.loads(self._recv_raw(wid))
+        return _plain_loads(self._recv_raw(wid))
 
     def _recv_raw(self, wid: int) -> bytes:
+        if self._rings is not None:
+            try:
+                return self._rings[wid].rsp.recv_bytes()
+            except rings.PeerGone:
+                self._died(wid)
         try:
             return self._conns[wid].recv_bytes()
         except (EOFError, OSError):
@@ -423,7 +488,7 @@ class ProcExecutor(Executor):
 
     def describe(self) -> dict:
         return {"name": self.name, "max_workers": self.max_workers,
-                "processes": self.processes}
+                "processes": self.processes, "transport": self.transport}
 
 
 def _encode_entries(entries, eng) -> list:

@@ -76,3 +76,16 @@ def dumps(obj, engine) -> bytes:
 
 def loads(data: bytes, engine):
     return _WireUnpickler(io.BytesIO(data), engine).load()
+
+
+def plain_dumps(obj) -> bytes:
+    """Protocol-envelope encoding: plain pickle for messages that by
+    construction carry only ints/floats/strings/bytes/tuples (round
+    framing, horizons, pre-encoded payload blobs) -- never simulation
+    references.  One definition so the pipe and shared-memory ring
+    transports speak byte-identical frames."""
+    return pickle.dumps(obj, pickle.HIGHEST_PROTOCOL)
+
+
+def plain_loads(data: bytes):
+    return pickle.loads(data)

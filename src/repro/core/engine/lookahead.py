@@ -68,3 +68,29 @@ class LookaheadScheduler(RoundScheduler):
 
 
 register_scheduler("lookahead", LookaheadScheduler)
+
+
+class BoundedLagScheduler(LookaheadScheduler):
+    """Lookahead without the global round barrier.
+
+    Identical conservative-PDES safety story, but the one topology-wide
+    window (``min over non-fused connections of min_latency_ps``) is
+    replaced by per-cluster horizons derived from the *cluster graph*
+    (``Engine.cluster_graph``): a cluster only synchronizes with the
+    clusters it actually exchanges events with, so decoupled subsystems
+    -- distinct tenants, compute islands between collectives, separate
+    pods -- advance independently instead of paying one global sync
+    point per window tick.  Bit-identity to serial is kept by staging
+    cross-wave posts with their serial post-order stamps and assigning
+    seqs only at each shard's flush (see
+    ``RoundScheduler._run_bounded``).
+
+    ``lookahead_ps`` is ignored in this mode: the per-edge latencies in
+    the cluster graph *are* the lookahead, edge by edge.
+    """
+
+    name = "bounded"
+    bounded_lag = True
+
+
+register_scheduler("bounded", BoundedLagScheduler)

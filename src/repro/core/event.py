@@ -201,6 +201,29 @@ class ShardedEventQueue:
             heapq.heappop(heads)        # stale: head popped or shard drained
         raise EmptyQueueError("peek_time on an empty event queue")
 
+    def shard_head_time(self, sid: int):
+        """Earliest pending time in one shard (``None`` when empty).
+        Bounded-lag schedulers read every shard's head to compute
+        per-cluster lower bounds, bypassing the global head heap."""
+        shard = self._shards[sid]
+        return shard[0][0] if shard else None
+
+    def pop_shard_window(self, sid: int, end_time) -> list:
+        """Pop one shard's events with ``time < end_time`` in
+        (time, rank, seq) order -- the bounded-lag feed, where every
+        cluster gets its *own* window end instead of a shared one.
+        Stale head-heap entries for the shard self-clean on the next
+        ``peek_time``; only a (possibly) improved head is re-pushed."""
+        shard = self._shards[sid]
+        batch = []
+        while shard and shard[0][0] < end_time:
+            batch.append(heapq.heappop(shard))
+        if batch:
+            self._len -= len(batch)
+            if shard:
+                heapq.heappush(self._heads, (shard[0][0], sid))
+        return batch
+
     def pop_window_sharded(self, end_time) -> tuple:
         """Pop every event with ``time < end_time``; returns
         ``([(shard_id, entries), ...], total_events)`` with shards in

@@ -167,6 +167,20 @@ class StarConnection(Connection):
         if request.dst is None and src_port is not self.hub:
             request.dst = self.hub.owner
 
+    def cluster_edges(self):
+        """Star, not clique: spoke traffic only ever reaches the hub's
+        cluster, and hub traffic only ever reaches a spoke's -- two
+        spokes never exchange events directly, so bounded-lag horizons
+        couple each device cluster to the coordinator alone (two
+        control-latency hops apart from each other, not one)."""
+        lat = self.min_latency_ps
+        hub = self.hub.owner.cluster_id
+        for port in self.endpoints:
+            spoke = port.owner.cluster_id
+            if spoke != hub:
+                yield (spoke, hub, lat)
+                yield (hub, spoke, lat)
+
 
 @dataclasses.dataclass
 class _RunOp:
@@ -230,6 +244,15 @@ class System:
     def load_trace(self, runops: typing.List[_RunOp],
                    devices: typing.Iterable[int] = None) -> None:
         devs = list(devices) if devices is not None else range(len(self.programs))
+        # Give the fabric advance notice of every planned collective:
+        # transfer-level backends refine their bounded-lag edges from
+        # the exact programs these will decompose into.
+        for op in runops:
+            if op.kind == "collective":
+                for g in op.group:
+                    if len(g) > 1:
+                        self.fabric.note_plan(op.coll_kind, float(op.bytes),
+                                              tuple(g))
         for d in devs:
             prog = self.programs[d]
             # per-device group resolution: pick the replica group containing d

@@ -104,6 +104,12 @@ class FabricBackend:
     def _install_extra(self, engine) -> None:
         """Hook for backends that register more components (links, DMAs)."""
 
+    def note_plan(self, kind: str, nbytes: float, group) -> None:
+        """Advance notice of one planned collective (``System.load_trace``
+        forwards the trace's ops).  Backends that derive bounded-lag
+        synchronization structure from the workload override this; the
+        default -- and the analytic backend -- ignore it."""
+
     # -- reporting / fault surface ---------------------------------------
     def fault_targets(self) -> typing.List[Component]:
         """Components a FaultInjector plan may address (e.g. links)."""

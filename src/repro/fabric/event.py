@@ -61,7 +61,7 @@ import dataclasses
 import typing
 
 from ..core.component import Component
-from ..core.connection import Connection, Request
+from ..core.connection import Connection, LagNode, Request
 from ..core.event import Event
 from ..core.hw import s_to_ps
 from .base import FabricBackend, FabricController
@@ -344,6 +344,36 @@ class DmaEngine(Component):
                               idx if x.dst_step is None else x.dst_step)))
 
 
+# -- bounded-lag refinement predicates (see FabricXbar.cluster_edges) --------
+
+def _dispatch_pred(ev: Event) -> bool:
+    """Controller-cluster events that may lead to an ``exec`` dispatch:
+    everything *except* a pending ``dma_done`` completion (whose handler
+    only does bookkeeping; a new dispatch needs a coordinator round trip
+    first).  Unknown event shapes conservatively count."""
+    p = ev.payload
+    return not (ev.kind == "request" and isinstance(p, Request)
+                and p.kind == "dma_done")
+
+
+def _queued_xfer_pred(ranks: set):
+    """Events at this cluster's links that have not serialized yet
+    (transfer requests and anything else that is not an in-flight
+    ``xmit_done``).  ``ranks`` is shared with the wire pred and keeps
+    growing while the plan walk discovers the cluster's links."""
+    def pred(ev: Event) -> bool:
+        return ev.component.rank in ranks and ev.kind != "xmit_done"
+    return pred
+
+
+def _in_flight_pred(ranks: set):
+    """Serializations already on the wire: their chunk/ack leaves after
+    the step's ack leg, no serialization left to pay."""
+    def pred(ev: Event) -> bool:
+        return ev.kind == "xmit_done" and ev.component.rank in ranks
+    return pred
+
+
 class FabricXbar(Connection):
     """Routing bus for all fabric traffic.  Routing lives in the
     connection (DP-3): components address links / DMA engines / the
@@ -357,15 +387,162 @@ class FabricXbar(Connection):
     in parallel under windowed schedulers.
     """
 
-    def __init__(self, name: str, controller, legs: Legs = ZERO_LEGS) -> None:
+    def __init__(self, name: str, controller, legs: Legs = ZERO_LEGS,
+                 topology=None) -> None:
         super().__init__(name)
         self.controller = controller
         self.legs = legs
+        self.topology = topology            # None -> clique cluster_edges
         self.registry: dict = {}
+        # Shared reference to the backend's noted collective plans
+        # (``EventFabric.note_plan``); non-empty -> trace-exact edges.
+        self.plans = None
 
     @property
     def min_latency_ps(self) -> int:
         return self.legs.floor_ps
+
+    def cluster_edges(self):
+        """The xbar's true routing graph, instead of the default clique
+        over its (many) endpoints.  Without this, one shared bus couples
+        every fabric cluster to the global minimum time and bounded-lag
+        horizons collapse back into the global barrier.
+
+        Both modes route controller dispatch through a *gate* node: the
+        controller's ``dma_done`` handler only completes bookkeeping and
+        reports to the coordinator -- it never issues a new ``exec``
+        directly, that always takes a full coordinator round trip over
+        the collective star first (two control-latency hops).  Excluding
+        pending completions from the dispatch bound is what lets a chip
+        run deep into its DMA program while its own ``dma_done`` for the
+        *previous* collective still sits at the controller.
+
+        Without noted plans, edges mirror ``_resolve_dst`` /
+        ``decompose`` conservatively:
+
+        * gate -> each chip cluster (``exec``), chip -> controller
+          (``dma_done``);
+        * chip cluster <-> its pod's DCN / bisection links: ``xfer``
+          requests out, ``xfer_done`` acks back;
+        * per-pod chip clique at the leg floor: ring/a2a chunks go to
+          torus neighbors, but collective-permute store-and-forward
+          issues ``xfer`` on *any* link along an intra-pod torus path
+          (and its ack returns from there), so the honest per-``xfer``
+          reach inside a pod is every other chip.  Rings never leave a
+          pod -- cross-pod traffic rides the DCN -- so no chip-to-chip
+          edge crosses pods.
+
+        With plans noted (``System.load_trace`` forwards every planned
+        collective), the per-pod cliques are replaced by the exact
+        per-link transfer graph of the planned programs -- see
+        :meth:`_planned_edges`.  Collectives *not* noted while plans
+        are in effect fail loudly at the strict-window guard, never
+        silently: the declared edges stop being a superset of the
+        traffic.
+        """
+        topo = self.topology
+        if topo is None:                    # standalone xbar: default clique
+            yield from super().cluster_edges()
+            return
+        legs = self.legs
+        ctrl = self.controller.cluster_id
+        registry = self.registry
+        gate = LagNode("fabric.ctrl.dispatch", ctrl, pred=_dispatch_pred,
+                       inherit_inputs=True)
+        by_pod: dict = {}
+        for d in range(topo.spec.total_chips):
+            cid = registry[_dma_name(d)].cluster_id
+            by_pod.setdefault(topo.coords(d)[0], []).append(cid)
+            yield (gate, cid, legs.exec_ps)
+            yield (cid, ctrl, legs.done_ps)
+        if self.plans:
+            yield from self._planned_edges()
+            return
+        for pod, chips in by_pod.items():
+            pod_links = []
+            for kind in ("dcn", "bisect"):
+                link = registry.get(f"fabric.pod{pod}.{kind}")
+                if link is not None:
+                    pod_links.append(link.cluster_id)
+            for cid in chips:
+                for lid in pod_links:
+                    yield (cid, lid, legs.xfer_ps)
+                    yield (lid, cid, legs.floor_ps)
+                for other in chips:
+                    if other != cid:
+                        yield (cid, other, legs.floor_ps)
+
+    def _planned_edges(self):
+        """Trace-exact link-level edges for the noted collective plans.
+
+        Each plan is re-decomposed into its per-chip DMA programs (the
+        same :func:`decompose` the controller will run), and every
+        transfer contributes its true legs.  Per link *cluster* two
+        refinement nodes split the two event classes a link holds:
+
+        * ``queue`` -- transfer requests not yet serialized.  Before
+          anything leaves the link they must serialize, so the only
+          out-edge is ``queue -> wire`` at the minimum serialization
+          time of any planned transfer on those links (``bytes / bw``;
+          fault ``slow`` only stretches it).
+        * ``wire`` -- in-flight serializations (``xmit_done``).  These
+          ack the issuing DMA and hand ring chunks to the consuming
+          neighbor no earlier than the step's ack leg.
+
+        Splitting matters because a chip fuses with its own four ICI
+        links: one node would bound the *neighbor's* horizon by the
+        chip's earliest pending event + one ack, hiding the
+        serialization the chunk still has to pay.
+        """
+        topo, legs, registry = self.topology, self.legs, self.registry
+        qnode: dict = {}                    # link cluster -> queue LagNode
+        wnode: dict = {}                    # link cluster -> wire LagNode
+        lranks: dict = {}                   # link cluster -> link ranks (grows)
+        mindur: dict = {}                   # link cluster -> min serialization
+        edges: list = []
+        for kind, nbytes, group in self.plans:
+            for d, steps in decompose(topo, kind, float(nbytes),
+                                      list(group)).items():
+                src = registry[_dma_name(d)].cluster_id
+                final = len(steps) - 1
+                while final >= 0 and not (steps[final].xfers
+                                          or steps[final].latency_ps > 0):
+                    final -= 1
+                for idx, st in enumerate(steps):
+                    if not st.xfers:
+                        continue
+                    # mirrors DmaEngine._start_step ack arithmetic
+                    ack = st.latency_ps - legs.xfer_ps
+                    if idx == final:
+                        ack -= legs.exec_ps + legs.done_ps
+                    ack = max(legs.floor_ps, ack)
+                    for x in st.xfers:
+                        link = registry[x.link]
+                        lcid = link.cluster_id
+                        ranks = lranks.get(lcid)
+                        if ranks is None:
+                            ranks = lranks[lcid] = set()
+                            qnode[lcid] = LagNode(
+                                f"links{lcid}.queue", lcid,
+                                pred=_queued_xfer_pred(ranks))
+                            wnode[lcid] = LagNode(
+                                f"links{lcid}.wire", lcid,
+                                pred=_in_flight_pred(ranks))
+                        ranks.add(link.rank)
+                        dur = s_to_ps(int(x.bytes) / link.bandwidth)
+                        prev = mindur.get(lcid)
+                        if prev is None or dur < prev:
+                            mindur[lcid] = dur
+                        edges.append((src, qnode[lcid], legs.xfer_ps))
+                        edges.append((wnode[lcid], src, ack))
+                        if x.dst_chip is not None:
+                            edges.append(
+                                (wnode[lcid],
+                                 registry[_dma_name(x.dst_chip)].cluster_id,
+                                 ack))
+        for lcid, qn in qnode.items():
+            edges.append((qn, wnode[lcid], mindur[lcid]))
+        return edges
 
     def transfer_time_ps(self, request: Request) -> int:
         legs = self.legs
@@ -632,6 +809,21 @@ class EventFabric(FabricBackend):
         self.dcn: typing.List[FabricLink] = []
         self.dmas: typing.List[DmaEngine] = []
         self.legs: Legs = make_legs(self.topology)
+        self.xbar: FabricXbar = None
+        self.plans: list = []               # noted (kind, bytes, group)
+        self._plan_keys: set = set()
+
+    def note_plan(self, kind: str, nbytes: float, group) -> None:
+        """Record one planned collective (``System.load_trace`` calls
+        this for every planned op).  Non-empty plans switch the xbar's
+        bounded-lag edges from the conservative per-pod cliques to the
+        exact link-level transfer graph of the planned programs; a
+        collective that then runs *unplanned* trips the strict-window
+        guard instead of corrupting determinism."""
+        key = (kind, float(nbytes), tuple(group))
+        if key not in self._plan_keys:
+            self._plan_keys.add(key)
+            self.plans.append(key)
 
     def make_controller(self) -> FabricController:
         return EventController("fabric.ctrl", self)
@@ -641,7 +833,9 @@ class EventFabric(FabricBackend):
         topo = self.topology
         legs = self.legs
         xbar = engine.register(
-            FabricXbar("fabric.xbar", self.controller, legs))
+            FabricXbar("fabric.xbar", self.controller, legs, topology=topo))
+        self.xbar = xbar
+        xbar.plans = self.plans             # shared: later notes are seen
         xbar.attach(self.controller)
         for d in range(spec.total_chips):
             dma = engine.register(DmaEngine(_dma_name(d), d, legs))

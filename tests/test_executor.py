@@ -13,7 +13,7 @@ from repro.core import (Component, Connection, Engine, EXECUTORS,
 SMALL = SystemSpec(pod_shape=(2, 2))
 
 EXECUTOR_VARIANTS = ("threads", "procs")
-SCHED_X_EXEC = [(s, e) for s in ("batch", "lookahead")
+SCHED_X_EXEC = [(s, e) for s in ("batch", "lookahead", "bounded")
                 for e in EXECUTOR_VARIANTS]
 
 
@@ -121,6 +121,26 @@ def test_fault_injection_through_executor(executor):
                    faults=faults, **kw)
     assert rep.summary() == oracle.summary()
     assert rep.time_s > healthy.time_s   # the fault actually fired
+
+
+@pytest.mark.parametrize("scheduler,executor", SCHED_X_EXEC)
+def test_transient_fault_bit_identity(scheduler, executor):
+    """A flapping link (docs/faults.md ``transient``) drops transfers on
+    the floor, so their acks never return and the affected rings stall
+    mid-collective.  That idle gap is exactly where bounded-lag horizons
+    run furthest ahead of the global floor -- per-cluster windows must
+    still replay the stall bit-identically to serial, on both executors
+    (under procs the fault hook replica fires inside the shard
+    worker)."""
+    faults = {"fabric.pod0.ici[0,1]+x": [(10e-6, "transient", 40e-6)]}
+    kw = dict(cost=_ar_cost(), spec=SMALL, device_limit=None,
+              fabric="event")
+    healthy = simulate(scheduler="serial", **kw)
+    oracle = simulate(scheduler="serial", faults=faults, **kw)
+    rep = simulate(scheduler=scheduler, executor=executor,
+                   faults=faults, **kw)
+    assert rep.summary() == oracle.summary()
+    assert oracle.summary() != healthy.summary()  # the fault bit
 
 
 def _rerun_engine(executor):

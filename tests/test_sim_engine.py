@@ -5,13 +5,14 @@ import threading
 
 import pytest
 
-from repro.core import (BatchParallelScheduler, Component, Connection,
+from repro.core import (BatchParallelScheduler, BoundedLagScheduler,
+                        Component, Connection,
                         EmptyQueueError, Engine, Event, EventQueue,
                         LimitedConnection, LinkConnection, LocalQueue,
                         LookaheadScheduler, MetricsHook, Request, SCHEDULERS,
                         ShardedEventQueue, SystemSpec, s_to_ps, simulate)
 
-ALL_SCHEDULERS = ("serial", "batch", "lookahead")
+ALL_SCHEDULERS = ("serial", "batch", "lookahead", "bounded")
 
 
 def _grouped(name, max_workers=4):
@@ -21,7 +22,8 @@ def _grouped(name, max_workers=4):
     commit machinery and the unsafe-post guard regardless of round
     width."""
     cls = {"batch": BatchParallelScheduler,
-           "lookahead": LookaheadScheduler}[name]
+           "lookahead": LookaheadScheduler,
+           "bounded": BoundedLagScheduler}[name]
     sched = cls(max_workers=max_workers)
     sched.pool_min_events = 0
     return sched
@@ -269,7 +271,8 @@ def test_scheduler_registry_has_all_three():
 # Scheduler variants: by name (adaptive merged/grouped rounds) and
 # pinned-grouped instances (pool_min_events=0: every round exercises the
 # per-cluster contexts, the commit path and the worker pool).
-SCHED_VARIANTS = ("batch", "lookahead", "batch-grouped", "lookahead-grouped")
+SCHED_VARIANTS = ("batch", "lookahead", "bounded",
+                  "batch-grouped", "lookahead-grouped", "bounded-grouped")
 
 
 def _sched_variant(spec):

@@ -10,10 +10,11 @@ repo) under any scheduler and prints either
 so perf PRs have a one-command, apples-to-apples baseline:
 
     python tools/profile_engine.py                      # serial throughput
-    python tools/profile_engine.py --scheduler lookahead --workers 4
+    python tools/profile_engine.py --scheduler bounded --workers 4
     python tools/profile_engine.py --scheduler lookahead --executor procs
     python tools/profile_engine.py --profile --sort tottime --limit 25
     python tools/profile_engine.py --all                # every scheduler
+    python tools/profile_engine.py --ipc                # pipe vs ring RTT
 
 (``--profile`` with ``--executor procs`` profiles only the parent's
 routing/commit side -- handlers run in the shard workers; profile them
@@ -22,6 +23,12 @@ under threads, where execution is in-process.)
 Wall-clock numbers here are what ``BENCH_fabric.json``'s ``replay``
 section tracks; the per-function table is what tells you *which* layer
 (queue, dispatch, handlers, commit) to attack next.
+
+``--ipc`` measures the procs executor's two transports head-to-head --
+``multiprocessing.Pipe`` vs the shared-memory SPSC ring of
+:mod:`repro.core.engine.executor.rings` -- and folds the round-trip
+times into the ``machine_calibration`` block of ``BENCH_fabric.json``
+so perf gates can adapt to the host.
 """
 from __future__ import annotations
 
@@ -76,7 +83,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="profile the engine over the event-fabric replay trace")
     ap.add_argument("--scheduler", default="serial",
-                    choices=("serial", "batch", "lookahead"))
+                    choices=("serial", "batch", "lookahead", "bounded"))
     ap.add_argument("--executor", default=None,
                     choices=("threads", "procs"),
                     help="executor backend for round schedulers "
@@ -91,12 +98,42 @@ def main(argv=None) -> int:
                     help="time every scheduler instead of --scheduler")
     ap.add_argument("--profile", action="store_true",
                     help="cProfile one run and print the hot-path table")
+    ap.add_argument("--ipc", action="store_true",
+                    help="microbenchmark pipe vs shared-memory-ring RTT "
+                         "and fold the numbers into BENCH_fabric.json's "
+                         "machine_calibration block")
+    ap.add_argument("--ipc-n", type=int, default=2000,
+                    help="round trips per IPC transport measurement")
     ap.add_argument("--sort", default="cumulative",
                     choices=("cumulative", "tottime", "ncalls"),
                     help="cProfile sort column")
     ap.add_argument("--limit", type=int, default=30,
                     help="rows of the cProfile table")
     args = ap.parse_args(argv)
+
+    if args.ipc:
+        from benchmarks.fabric_contention import merge_bench
+        from repro.core.engine.executor import rings
+        pipe = rings.pipe_rtt_us(reps=args.ipc_n)
+        ring = rings.ring_rtt_us(reps=args.ipc_n)
+        cal = {"pipe_rtt_us": round(pipe, 1) if pipe == pipe else None,
+               "ring_rtt_us": round(ring, 1) if ring == ring else None,
+               "ipc_reps": args.ipc_n, "cpu_count": os.cpu_count()}
+        print(f"# pipe rtt: {cal['pipe_rtt_us']}us   "
+              f"ring rtt: {cal['ring_rtt_us']}us   "
+              f"({args.ipc_n} round trips, 256B frames, "
+              f"{cal['cpu_count']} cpus)")
+        if cal["ring_rtt_us"] is None:
+            print("# shared-memory rings unavailable on this host "
+                  "(no fork or no shared_memory); procs executor will "
+                  "use the pipe transport")
+        elif (os.cpu_count() or 1) == 1:
+            print("# single-CPU host: both transports pay a context "
+                  "switch per message, parity expected; rings win on "
+                  "multi-core hosts by removing the syscall")
+        path = merge_bench({"machine_calibration": cal})
+        print(f"# wrote {path} (machine_calibration)")
+        return 0
 
     if args.profile:
         system = build_system(args.scheduler, args.workers, args.tenants,
@@ -119,7 +156,7 @@ def main(argv=None) -> int:
     print(f"# tenants={args.tenants} rounds={args.rounds} "
           f"workers={args.workers} repeat={args.repeat} (best shown)")
     print(f"{'scheduler':>10}  {'wall':>12}  {'':>14}  {'throughput':>15}")
-    scheds = (("serial", "batch", "lookahead") if args.all
+    scheds = (("serial", "batch", "lookahead", "bounded") if args.all
               else (args.scheduler,))
     for sched in scheds:
         best = min((run_once(args, sched) for _ in range(args.repeat)),

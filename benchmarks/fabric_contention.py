@@ -193,10 +193,9 @@ def replay_speedup(workers: int = 4, tenants: int = 4,
         rows[f"rounds_{sched}"] = n_rounds
         rows[f"rounds_per_sec_{sched}{workers}"] = round(
             n_rounds / best[sched])
-        # per-round synchronization tax: wall-clock paid over the serial
-        # oracle, amortized across this scheme's rounds
-        rows[f"sync_overhead_us_per_round_{sched}"] = round(
-            1e6 * (best[sched] - best["serial"]) / n_rounds, 2)
+        rows.update(sync_overhead_fields(
+            f"sync_overhead_us_per_round_{sched}",
+            best[sched], best["serial"], n_rounds))
     for sched in ("lookahead", "bounded"):
         ratios = sorted(l / s for l, s in zip(walls[sched],
                                               walls["serial"]))
@@ -368,14 +367,28 @@ def replay_speedup_procs(workers: int = 4, tenants: int = 4,
             eng.events_processed / best[sched])
         rows[f"rounds_{sched}"] = n_rounds
         rows[f"rounds_per_sec_{sched}4"] = round(n_rounds / best[sched])
-        rows[f"sync_overhead_us_per_round_{sched}"] = round(
-            1e6 * (best[sched] - best["serial"]) / n_rounds, 2)
+        rows.update(sync_overhead_fields(
+            f"sync_overhead_us_per_round_{sched}",
+            best[sched], best["serial"], n_rounds))
         ratios = sorted(l / s for l, s in zip(walls[sched],
                                               walls["serial"]))
         rows[f"wall_ratio_{sched}4_over_serial"] = round(
             ratios[len(ratios) // 2], 2)
     rows.update(machine_calibration())
     return rows
+
+
+def sync_overhead_fields(key: str, wall: float, serial_wall: float,
+                         n_rounds: int) -> dict:
+    """Per-round synchronization tax over the serial oracle, amortized
+    across this scheme's rounds.  Interleaved best-of-N walls still
+    leave the delta of two noisy minima: when the parallel scheduler's
+    best repetition lands in a quieter slice than serial's, the raw
+    delta goes *negative*, which is measurement noise, not a negative
+    tax.  The headline field is clamped at 0; the signed value is kept
+    in ``<key>_raw`` so the noise floor stays visible in the trend."""
+    raw = 1e6 * (wall - serial_wall) / max(1, n_rounds)
+    return {key: round(max(0.0, raw), 2), key + "_raw": round(raw, 2)}
 
 
 def merge_bench(update: dict) -> str:

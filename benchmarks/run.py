@@ -20,6 +20,8 @@ MODULES = [
     ("case_study", "Fig.9 — U-mode vs D-mode traffic/time"),
     ("fault_tolerance", "straggler / failure / ckpt-interval what-ifs"),
     ("roofline_table", "§Roofline — dry-run cell table"),
+    ("sweep_throughput",
+     "vectorized pricing + fleet sweep -> BENCH_fabric.json 'sweep'"),
 ]
 
 

@@ -1,0 +1,251 @@
+"""Vectorized pricing + fleet-sweep throughput -> BENCH_fabric.json "sweep".
+
+Two claims from the vectorized-analytic work, measured and gated:
+
+1. **Pricing parity + speedup**: ``repro.fabric.pricing.price`` over a
+   >= 1,000-point (config x traffic) grid must be bit-EQUAL to looping
+   ``Topology.price`` (the scalar oracle) point by point, and >= 50x
+   faster.  Parity is exact float equality -- the kernels mirror the
+   scalar expression trees -- so any drift is a bug, not tolerance.
+2. **Sweep machinery**: the quick grid sweeps end to end through
+   ``tools.sweep`` worker processes; a repeat run skips every config
+   via the result cache, and a forced rerun hits the content-hashed
+   plan cache on disk.  The merged results file must parse and be
+   queryable.
+
+The gated numbers land in the ``sweep`` section of BENCH_fabric.json
+(merge-written; "replay"/"runs" sections belong to other benchmarks):
+
+  grid_points                points priced in the parity/speedup grid
+  configs_per_sec            quick-sweep simulation throughput
+  cache_hit_rate             plan-cache hit rate on the forced rerun
+  pricing_speedup_vs_scalar  vectorized-vs-looped-scalar speedup
+
+Usage::
+
+  PYTHONPATH=src:. python -m benchmarks.sweep_throughput [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for p in (os.path.join(REPO, "src"), REPO):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+from repro.core import SystemSpec                          # noqa: E402
+from repro.core.hw import ChipSpec                          # noqa: E402
+from repro.core.topology import Topology                    # noqa: E402
+from repro.fabric import pricing                            # noqa: E402
+from benchmarks.fabric_contention import merge_bench        # noqa: E402
+from tools import sweep                                     # noqa: E402
+
+MIN_SPEEDUP = 50.0
+MIN_GRID = 1000
+
+
+def _parity_grid():
+    """(config x traffic) grid: every kind x group-class x payload x
+    group-size point, crossed with several SystemSpecs."""
+    specs = [
+        SystemSpec(pod_shape=(4, 4)),
+        SystemSpec(pod_shape=(8, 8), num_pods=2),
+        SystemSpec(pod_shape=(4, 8), num_pods=4),
+        SystemSpec(pod_shape=(4, 4),
+                   chip=ChipSpec(ici_link_bandwidth=25e9)),
+    ]
+    payloads = [64.0, 4096.0, 1e6, 4e6, 64e6, 1e9]
+    sizes = [1, 2, 4, 8, 16, 64]
+    points = []          # (spec_idx, kind_code, cls_code, B, n)
+    for si, spec in enumerate(specs):
+        for kind, cls, B, n in itertools.product(
+                pricing.KINDS, pricing.CLASSES, payloads, sizes):
+            if cls == "cross_pod" and spec.num_pods < 2:
+                continue
+            points.append((si, pricing.KIND_CODES[kind],
+                           pricing.CLASS_CODES[cls], B, float(n)))
+    return specs, points
+
+
+def pricing_parity() -> dict:
+    """Exact-equality check of the vectorized kernels against the
+    scalar oracle (``Topology.price_point``) on the exhaustive grid --
+    including (class, n) combinations no real group produces."""
+    specs, points = _parity_grid()
+    si = np.array([p[0] for p in points])
+    kind = np.array([p[1] for p in points])
+    cls = np.array([p[2] for p in points])
+    B = np.array([p[3] for p in points])
+    n = np.array([p[4] for p in points])
+    stacked = pricing.FabricParams.stack(
+        [specs[i] for i in si])       # one param row per point
+    topos = [Topology(s) for s in specs]
+    scalar = np.array([
+        topos[si[i]].price_point(pricing.KINDS[kind[i]],
+                                 pricing.CLASSES[cls[i]],
+                                 float(B[i]), int(n[i]))
+        for i in range(len(points))])
+    vec = pricing.price(kind, cls, B, n, stacked)
+    exact = bool(np.array_equal(scalar, vec))
+    if not exact:
+        for i in np.nonzero(scalar != vec)[0][:5]:
+            print(f"  MISMATCH {points[i]}: scalar={scalar[i]!r} "
+                  f"vec={vec[i]!r}")
+    return {"parity_grid_points": len(points), "exact_parity": exact}
+
+
+def _real_groups(spec: SystemSpec):
+    """Representative replica groups of every class the spec supports:
+    x rows, y columns, 2-D blocks, and cross-pod pairs -- actual member
+    lists, so the scalar baseline pays the same ``classify_group`` walk
+    the pre-vectorization sweep paid on every single call."""
+    Y, X = spec.pod_shape
+    cpp = spec.chips_per_pod
+    groups = [[y * X + x for x in range(X)] for y in range(Y)]          # rows
+    groups += [[y * X + x for y in range(Y)] for x in range(X)]         # cols
+    groups += [list(range(2 * X)), list(range(cpp))]                    # blocks
+    if spec.num_pods > 1:
+        groups += [[k + p * cpp for p in range(spec.num_pods)]
+                   for k in range(4)]                                   # x-pod
+    return groups
+
+
+def pricing_speedup(repeats: int = 3) -> dict:
+    """Best-of-N wall clock: vector-pricing a declarative
+    (kind x group x payload) grid vs the looped scalar path
+    (``Topology.price`` once per point, classify included) that was the
+    only way to price before vectorization.  Results must stay exactly
+    equal point by point."""
+    specs = [SystemSpec(pod_shape=(8, 8)),
+             SystemSpec(pod_shape=(8, 8), num_pods=2)]
+    payloads = np.geomspace(64.0, 4e9, 40)
+    t_vec = t_scalar = 0.0
+    grid_points = 0
+    for spec in specs:
+        topo = Topology(spec)
+        groups = _real_groups(spec)
+        grid_points += len(pricing.KINDS) * len(groups) * len(payloads)
+
+        # vectorized: classify each distinct group once (memoized -- a
+        # sweep prices the same groups at every timestep, so steady
+        # state is the warm memo), then cross kinds x groups x payloads
+        # into flat arrays with repeat/tile -- O(unique groups) Python,
+        # O(points) numpy.
+        best = float("inf")
+        memo: dict = {}
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            cls_u = np.array([pricing.classify_cached(topo, memo, tuple(g))
+                              for g in groups])
+            n_u = np.array([float(len(g)) for g in groups])
+            nk, ng, nb = len(pricing.KINDS), len(groups), len(payloads)
+            kind = np.repeat(np.arange(nk), ng * nb)
+            cls = np.tile(np.repeat(cls_u, nb), nk)
+            n = np.tile(np.repeat(n_u, nb), nk)
+            B = np.tile(payloads, nk * ng)
+            vec = pricing.price(kind, cls, B, n,
+                                pricing.FabricParams.from_spec(spec))
+            best = min(best, time.perf_counter() - t0)
+        t_vec += best
+
+        t0 = time.perf_counter()
+        scalar = [topo.price(k, float(b), [g])
+                  for k in pricing.KINDS for g in groups for b in payloads]
+        t_scalar += time.perf_counter() - t0
+        assert np.array_equal(np.asarray(scalar), vec), \
+            "vectorized grid pricing drifted from the scalar loop"
+    return {"grid_points": grid_points,
+            "t_scalar_s": round(t_scalar, 4), "t_vec_s": round(t_vec, 6),
+            "pricing_speedup_vs_scalar": round(t_scalar / t_vec, 1)}
+
+
+def sweep_smoke(workers: int = 2) -> dict:
+    """Quick-grid sweep through real worker processes + both cache
+    tiers; returns throughput/caching numbers for the sweep section."""
+    d = tempfile.mkdtemp(prefix="sweep_bench_")
+    out = os.path.join(d, "results.json")
+    cache = os.path.join(d, "plancache")
+    try:
+        first = sweep.run_sweep(sweep.GRIDS["quick"], out=out,
+                                workers=workers, cache_dir=cache,
+                                quiet=True)
+        assert first["errors"] == 0, f"sweep errors: {first}"
+        # repeat run: every row must come from the result cache
+        again = sweep.run_sweep(sweep.GRIDS["quick"], out=out,
+                                workers=workers, cache_dir=cache,
+                                quiet=True)
+        assert again["simulated"] == 0, f"result cache missed: {again}"
+        assert again["result_cache_hits"] == first["grid_points"]
+        # forced rerun: simulations repeat but decompose() doesn't --
+        # fresh workers hit the on-disk plan cache
+        forced = sweep.run_sweep(sweep.GRIDS["quick"], out=out,
+                                 workers=workers, cache_dir=cache,
+                                 force=True, quiet=True)
+        assert forced["errors"] == 0
+        data = sweep.load_results(out)          # must parse + query
+        rows = sweep.query_rows(data, {"fabric": "event"},
+                                ["scenario", "time_s"])
+        assert rows and all("time_s" in r for r in rows)
+        return {"sweep_grid_points": first["grid_points"],
+                "configs_per_sec": first["configs_per_sec"],
+                "cache_hit_rate": forced["plan_cache_hit_rate"],
+                "repeat_result_cache_hits": again["result_cache_hits"]}
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: same gates, fewer timing repeats "
+                         "and fewer sweep workers")
+    args = ap.parse_args(argv)
+
+    parity = pricing_parity()
+    print(f"pricing_parity,{parity['parity_grid_points']},"
+          f"exact={parity['exact_parity']}")
+    speed = pricing_speedup(repeats=2 if args.quick else 5)
+    print(f"pricing_speedup,{speed['t_vec_s'] * 1e6:.1f}us,"
+          f"{speed['pricing_speedup_vs_scalar']}x on "
+          f"{speed['grid_points']} points")
+
+    smoke = sweep_smoke(workers=2 if args.quick else 4)
+    print(f"sweep_quick,{smoke['sweep_grid_points']} points,"
+          f"{smoke['configs_per_sec']} configs/s")
+    print(f"sweep_caches,plan_hit_rate={smoke['cache_hit_rate']},"
+          f"result_hits={smoke['repeat_result_cache_hits']}")
+
+    section = {
+        "grid_points": speed["grid_points"],
+        "configs_per_sec": smoke["configs_per_sec"],
+        "cache_hit_rate": smoke["cache_hit_rate"],
+        "pricing_speedup_vs_scalar": speed["pricing_speedup_vs_scalar"],
+        "exact_parity": parity["exact_parity"],
+        "parity_grid_points": parity["parity_grid_points"],
+        "written_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+    }
+    path = merge_bench({"sweep": section})
+    print(f"# merged 'sweep' section -> {path}")
+
+    ok = (parity["exact_parity"]
+          and speed["grid_points"] >= MIN_GRID
+          and speed["pricing_speedup_vs_scalar"] >= MIN_SPEEDUP
+          and smoke["cache_hit_rate"] > 0.95)
+    if not ok:
+        print(f"# GATE FAILED: need exact parity on >= {MIN_GRID} points, "
+              f">= {MIN_SPEEDUP}x speedup, cache hit rate > 0.95; "
+              f"got {section}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

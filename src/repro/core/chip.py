@@ -41,10 +41,14 @@ class TensorCore(Component):
         self.total_flops = 0.0
 
     def duration_ps(self, job: ComputeJob) -> int:
-        peak = self.spec.flops_for_dtype(job.dtype_bits) / self.fault_slow_factor
-        t_compute = job.flops / peak
+        t_compute = job.flops / self.spec.flops_for_dtype(job.dtype_bits)
         t_mem = job.hbm_bytes / self.spec.hbm_bandwidth
-        return s_to_ps(max(t_compute, t_mem) + self.spec.op_launch_overhead_s)
+        # the slow factor stretches the whole roofline term, not just the
+        # flops leg: a throttled chip is slow on memory-bound ops too
+        # (dividing only the flops peak made stragglers invisible on any
+        # hbm-bound trace)
+        return s_to_ps(max(t_compute, t_mem) * self.fault_slow_factor
+                       + self.spec.op_launch_overhead_s)
 
     def handle(self, event: Event) -> None:
         if event.kind == "request":

@@ -437,7 +437,7 @@ class HloModule:
                 continue
             if ins.opcode.startswith(COLLECTIVE_OPS):
                 kind = next(k for k in COLLECTIVE_OPS if ins.opcode.startswith(k))
-                groups = parse_replica_groups(ins.attrs)
+                groups = parse_replica_groups(ins.attrs, op=ins.name)
                 if kind == "collective-permute" and not groups:
                     # permutes carry source_target_pairs, not replica_groups;
                     # all pairs shift concurrently -> one synchronized group

@@ -31,6 +31,7 @@ import dataclasses
 import math
 import re
 import typing
+import warnings
 
 import numpy as np
 
@@ -48,7 +49,14 @@ _LIST_RE = re.compile(r"replica_groups=\{\{([\d,{}\s]+)\}\}")
 _EMPTY_RE = re.compile(r"replica_groups=\{\s*\}")
 
 
-def parse_replica_groups(attr: str) -> typing.List[typing.List[int]]:
+# Ops already warned about for the `replica_groups={}` shorthand; one
+# warning per op name per run, so a sweep over foreign HLO says which
+# collectives it priced as free without drowning the log.
+_warned_empty_groups: set = set()
+
+
+def parse_replica_groups(attr: str,
+                         op: str = None) -> typing.List[typing.List[int]]:
     """Parse HLO ``replica_groups=`` in both iota and explicit-list forms.
 
     Iota form: ``[G,S]<=[d0,d1,...]T(p0,p1,...)`` -- reshape iota(prod d)
@@ -60,7 +68,10 @@ def parse_replica_groups(attr: str) -> typing.List[typing.List[int]]:
     "one flat group" shorthand -- the latter is a known limitation: we
     cannot recover the device count here, so such a collective carries
     no groups and is treated as free downstream (the SPMD modules we
-    analyze always emit explicit groups).  Both forms are anchored to
+    analyze always emit explicit groups).  Because "free" silently
+    flatters sweeps over foreign HLO, hitting the shorthand emits a
+    once-per-run :class:`UserWarning` naming the op (pass ``op=`` for an
+    attributable message).  Both forms are anchored to
     ``replica_groups=`` -- an earlier unanchored parse happily consumed
     ``source_target_pairs`` brace lists, silently defeating the permute
     fallback in ``hlo.py``.  A present but malformed ``replica_groups=``
@@ -93,8 +104,17 @@ def parse_replica_groups(attr: str) -> typing.List[typing.List[int]]:
         if not groups:
             raise ValueError(f"malformed replica_groups list: {attr!r}")
         return groups
-    if "replica_groups" in attr and not _EMPTY_RE.search(attr):
-        raise ValueError(f"malformed replica_groups attribute: {attr!r}")
+    if "replica_groups" in attr:
+        if not _EMPTY_RE.search(attr):
+            raise ValueError(f"malformed replica_groups attribute: {attr!r}")
+        label = op or "<unnamed collective>"
+        if label not in _warned_empty_groups:
+            _warned_empty_groups.add(label)
+            warnings.warn(
+                f"replica_groups={{}} on {label}: XLA's one-flat-group "
+                "shorthand carries no device count, so this collective "
+                "will be priced as FREE (known limitation; emit explicit "
+                "replica groups to price it)", UserWarning, stacklevel=2)
     return []
 
 
@@ -205,15 +225,14 @@ class Topology:
         return cross / self.spec.bisection_bandwidth_per_pod + \
             (self.X / 2 + self.Y / 2) * self.spec.chip.ici_hop_latency_s
 
-    def _cross_pod_time(self, kind: str, B: float, groups) -> float:
+    def _cross_pod_time(self, kind: str, B: float, n: int,
+                        n_groups: int) -> float:
         """Groups span pods: hierarchical intra-pod + DCN exchange.
 
         For the common pod-axis case (each group has one chip per pod),
         every group moves B bytes across DCN simultaneously; the pod's
         aggregate DCN bandwidth is shared by all concurrent groups."""
         c = self.spec.chip
-        n_groups = len(groups)
-        n = len(groups[0])
         pods = self.spec.num_pods
         per_pod_members = max(1, n // pods)
         t = 0.0
@@ -232,39 +251,81 @@ class Topology:
             t += self._block2d_time(B * per_pod_members, per_pod_members, 1.0)
         return t
 
-    def collective_time_s(self, kind: str, bytes_per_shard: float,
-                          groups: typing.List[typing.List[int]]) -> float:
-        """Time for one collective op; also debits link byte counters."""
+    def price(self, kind: str, bytes_per_shard: float,
+              groups: typing.List[typing.List[int]]) -> float:
+        """Pure analytic time for one collective op.
+
+        Stateless: never touches the per-link byte counters, so batched
+        (vectorized) pricing over a whole grid may call the same
+        formulas without mutating fabric occupancy mid-grid.  The
+        vectorized mirror lives in :mod:`repro.fabric.pricing`; this
+        scalar path is its parity oracle (``tests/test_pricing.py``
+        asserts exact float equality).
+        """
         if not groups or len(groups[0]) <= 1:
             return 0.0
+        return self.price_point(kind, self.classify_group(groups[0]),
+                                float(bytes_per_shard), len(groups[0]),
+                                n_groups=len(groups))
+
+    def price_point(self, kind: str, cls: str, B: float, n: int,
+                    n_groups: int = 1) -> float:
+        """Analytic time for one (kind, group-class, bytes, size) point
+        with the class given explicitly rather than derived from group
+        membership.  This is the scalar oracle the vectorized kernels
+        in :mod:`repro.fabric.pricing` are tested against point by
+        point: same expression trees, so equality is exact."""
+        if n <= 1:
+            return 0.0
+        if cls == "cross_pod":
+            return self._cross_pod_time(kind, B, n, n_groups)
+        if kind == "all-reduce":
+            return self._ring_time(B, n, 2.0) if cls.startswith("ring") else \
+                self._block2d_time(B, n, 2.0)
+        if kind in ("all-gather", "reduce-scatter"):
+            return self._ring_time(B, n, 1.0) if cls.startswith("ring") else \
+                self._block2d_time(B, n, 1.0)
+        if kind == "all-to-all":
+            return self._alltoall_ring_time(B, n) if cls.startswith("ring") \
+                else self._alltoall_block_time(B, n)
+        if kind == "collective-permute":
+            c = self.spec.chip
+            return B / c.ici_link_bandwidth + c.ici_hop_latency_s
+        raise ValueError(f"unknown collective kind {kind!r}")
+
+    def debit_links(self, kind: str, bytes_per_shard: float,
+                    groups: typing.List[typing.List[int]]) -> None:
+        """Charge one collective's traffic to the per-link byte counters
+        (the analytic occupancy report).  Explicitly separate from
+        :meth:`price` so pricing stays pure; ``collective_time_s``
+        composes the two for the live simulation path."""
+        if not groups or len(groups[0]) <= 1:
+            return
         n = len(groups[0])
         cls = self.classify_group(groups[0])
         B = float(bytes_per_shard)
         if cls == "cross_pod":
-            t = self._cross_pod_time(kind, B, groups)
             share = B * (len(groups) / max(1, self.spec.num_pods))
             for l in self.dcn:
                 l.bytes_total += share
-            return t
+            return
         if kind == "all-reduce":
-            t = self._ring_time(B, n, 2.0) if cls.startswith("ring") else \
-                self._block2d_time(B, n, 2.0)
             per_link = 2 * (n - 1) / n * B / 2
         elif kind in ("all-gather", "reduce-scatter"):
-            t = self._ring_time(B, n, 1.0) if cls.startswith("ring") else \
-                self._block2d_time(B, n, 1.0)
             per_link = (n - 1) / n * B / 2
         elif kind == "all-to-all":
-            t = self._alltoall_ring_time(B, n) if cls.startswith("ring") else \
-                self._alltoall_block_time(B, n)
             per_link = B * (n - 1) / 8
         elif kind == "collective-permute":
-            c = self.spec.chip
-            t = B / c.ici_link_bandwidth + c.ici_hop_latency_s
             per_link = B
         else:
             raise ValueError(f"unknown collective kind {kind!r}")
         self._debit_links(groups, cls, per_link)
+
+    def collective_time_s(self, kind: str, bytes_per_shard: float,
+                          groups: typing.List[typing.List[int]]) -> float:
+        """Time for one collective op; also debits link byte counters."""
+        t = self.price(kind, bytes_per_shard, groups)
+        self.debit_links(kind, bytes_per_shard, groups)
         return t
 
     def _debit_links(self, groups, cls, per_link_bytes: float) -> None:

@@ -7,13 +7,19 @@ plumb a ``fabric=`` knob through (default ``SystemSpec.fabric``).
 
 * ``analytic`` -- closed-form ring/hierarchical/bisection pricing
   (O(1) events per collective; no contention between collectives).
+  Same-timestep pricings are batched through the vectorized kernels in
+  :mod:`repro.fabric.pricing` (bit-equal to the scalar formulas).
 * ``event``    -- per-hop transfer events on link / DMA-engine
   components; concurrent collectives queue on shared links.
+  Decompositions are memoized by content hash
+  (:mod:`repro.fabric.plancache`; same plan key -> skip decompose).
 """
+from . import plancache, pricing
 from .base import FabricBackend, FabricController
 from .analytic import AnalyticFabric
 from .event import (EventFabric, FabricLink, DmaEngine, DmaStep, Legs,
                     Xfer, decompose, make_legs)
+from .plancache import cached_decompose
 
 FABRICS: dict = {}
 
@@ -41,5 +47,6 @@ register_fabric("event", EventFabric)
 __all__ = [
     "FabricBackend", "FabricController", "AnalyticFabric", "EventFabric",
     "FabricLink", "DmaEngine", "DmaStep", "Legs", "Xfer", "decompose",
-    "make_legs", "FABRICS", "register_fabric", "make_fabric",
+    "cached_decompose", "make_legs", "FABRICS", "register_fabric",
+    "make_fabric", "plancache", "pricing",
 ]

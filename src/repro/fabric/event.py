@@ -65,6 +65,7 @@ from ..core.connection import Connection, LagNode, Request
 from ..core.event import Event
 from ..core.hw import s_to_ps
 from .base import FabricBackend, FabricController
+from .plancache import cached_decompose
 
 
 # -- per-chip transfer programs ----------------------------------------------
@@ -501,8 +502,8 @@ class FabricXbar(Connection):
         mindur: dict = {}                   # link cluster -> min serialization
         edges: list = []
         for kind, nbytes, group in self.plans:
-            for d, steps in decompose(topo, kind, float(nbytes),
-                                      list(group)).items():
+            for d, steps in cached_decompose(topo, kind, float(nbytes),
+                                             list(group)).items():
                 src = registry[_dma_name(d)].cluster_id
                 final = len(steps) - 1
                 while final >= 0 and not (steps[final].xfers
@@ -585,7 +586,12 @@ class EventController(FabricController):
 
     def begin(self, key, kind: str, nbytes: float,
               group: typing.List[int]) -> None:
-        progs = decompose(self.backend.topology, kind, float(nbytes), group)
+        # content-hashed plan cache: the same (topology, kind, bytes,
+        # group) triple decomposes once per process (or once per sweep,
+        # with the disk tier) -- the cached programs are read-only and
+        # this filter copies into a fresh dict before use
+        progs = cached_decompose(self.backend.topology, kind,
+                                 float(nbytes), group)
         progs = {d: steps for d, steps in progs.items() if steps}
         if not progs:
             self.schedule("noop_done", 0, payload=key)

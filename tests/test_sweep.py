@@ -1,0 +1,172 @@
+"""Sweep driver + plan cache tests: grid expansion, content-hashed
+result caching, merge-written queryable results, worker-pool execution,
+and the two-tier (memory/disk) decomposition cache."""
+import json
+import os
+
+import pytest
+
+from repro.core import SystemSpec
+from repro.core.topology import Topology
+from repro.fabric import plancache
+from repro.fabric.event import decompose
+from tools import sweep
+
+TINY = {
+    "scenario": ["allreduce_ladder"],
+    "topology": ["pod2x2"],
+    "scheduler": ["serial"],
+    "fabric": ["analytic", "event"],
+    "faults": ["none"],
+}
+
+
+# -- grid expansion ----------------------------------------------------------
+
+def test_expand_grid_crosses_axes_and_hashes():
+    configs = sweep.expand_grid(TINY)
+    assert len(configs) == 2
+    ids = {c["config_id"] for c in configs}
+    assert len(ids) == 2                      # distinct content hashes
+    again = {c["config_id"] for c in sweep.expand_grid(TINY)}
+    assert ids == again                       # stable across expansions
+
+
+def test_expand_grid_skips_structurally_invalid_combos():
+    grid = {**TINY, "scenario": ["cross_pod_sync"],      # needs >= 2 pods
+            "faults": ["none", "slow_link"]}             # needs event fabric
+    configs = sweep.expand_grid(grid)
+    # pod2x2 is single-pod: cross_pod_sync expands to nothing at all
+    assert configs == []
+    grid["topology"] = ["pod4x4x2"]
+    configs = sweep.expand_grid(grid)
+    # slow_link x analytic dropped; event keeps both fault plans
+    combos = {(c["fabric"], c["faults"]) for c in configs}
+    assert combos == {("analytic", "none"), ("event", "none"),
+                      ("event", "slow_link")}
+
+
+def test_expand_grid_rejects_unknown_axis_values():
+    with pytest.raises(ValueError, match="unknown scenario"):
+        sweep.expand_grid({**TINY, "scenario": ["warp_drive"]})
+    with pytest.raises(ValueError, match="unknown topology"):
+        sweep.expand_grid({**TINY, "topology": ["pod0x0"]})
+
+
+# -- end-to-end sweep: results, caching, query -------------------------------
+
+def test_sweep_inline_writes_queryable_results(tmp_path):
+    out = str(tmp_path / "results.json")
+    stats = sweep.run_sweep(TINY, out=out, workers=0, quiet=True)
+    assert stats["grid_points"] == 2
+    assert stats["simulated"] == 2
+    assert stats["errors"] == 0
+    data = json.loads(open(out).read())           # merge-written, parseable
+    assert set(data) == {"meta", "rows"}
+    assert len(data["rows"]) == 2
+    rows = sweep.query_rows(data, {"fabric": "event"}, ["time_s", "events"])
+    assert len(rows) == 1 and rows[0]["time_s"] > 0
+    # both fabrics simulated the same scenario: same device count
+    all_rows = sweep.query_rows(data)
+    assert {r["devices"] for r in all_rows} == {4}
+
+
+def test_sweep_repeat_run_hits_result_cache(tmp_path):
+    out = str(tmp_path / "results.json")
+    first = sweep.run_sweep(TINY, out=out, workers=0, quiet=True)
+    again = sweep.run_sweep(TINY, out=out, workers=0, quiet=True)
+    assert again["simulated"] == 0
+    assert again["result_cache_hits"] == first["grid_points"]
+    forced = sweep.run_sweep(TINY, out=out, workers=0, force=True,
+                             quiet=True)
+    assert forced["simulated"] == first["grid_points"]
+
+
+def test_sweep_merge_preserves_other_grids_rows(tmp_path):
+    out = str(tmp_path / "results.json")
+    sweep.run_sweep(TINY, out=out, workers=0, quiet=True)
+    other = {**TINY, "fabric": ["analytic"], "faults": ["straggler_chip"]}
+    sweep.run_sweep(other, out=out, workers=0, quiet=True)
+    data = sweep.load_results(out)
+    assert len(data["rows"]) == 3                 # 2 + 1, nothing clobbered
+    slow = sweep.query_rows(data, {"faults": "straggler_chip"})
+    none = sweep.query_rows(data, {"faults": "none",
+                                   "fabric": "analytic"})
+    # the straggler chip slows the whole data-parallel ladder down
+    assert slow[0]["time_s"] > none[0]["time_s"]
+
+
+def test_sweep_worker_pool_matches_inline(tmp_path):
+    grid = {**TINY, "topology": ["pod2x2", "pod4x4"]}
+    out_pool = str(tmp_path / "pool.json")
+    out_inline = str(tmp_path / "inline.json")
+    sweep.run_sweep(grid, out=out_pool, workers=2, quiet=True)
+    sweep.run_sweep(grid, out=out_inline, workers=0, quiet=True)
+    pool = sweep.load_results(out_pool)["rows"]
+    inline = sweep.load_results(out_inline)["rows"]
+    assert set(pool) == set(inline)
+    for cid in pool:
+        # simulation results are deterministic: identical across
+        # processes; only wall-clock and cache counters may differ
+        for k in ("time_s", "events", "devices", "collectives_completed",
+                  "compute_util"):
+            assert pool[cid][k] == inline[cid][k], (cid, k)
+
+
+def test_run_config_rows_have_stable_schema():
+    cfg = sweep.expand_grid(TINY)[0]
+    row = sweep.run_config(cfg)
+    for field in ("config_id", "scenario", "topology", "scheduler",
+                  "fabric", "faults", "time_s", "wall_s", "events",
+                  "plan_lookups", "plan_misses"):
+        assert field in row
+
+
+# -- plan cache --------------------------------------------------------------
+
+@pytest.fixture
+def clean_plancache():
+    plancache.clear()
+    plancache.reset_stats()
+    plancache.configure(None)
+    yield
+    plancache.clear()
+    plancache.reset_stats()
+    plancache.configure(None)
+
+
+def test_plancache_memory_tier(clean_plancache):
+    topo = Topology(SystemSpec(pod_shape=(4, 4)))
+    group = list(range(4))
+    a = plancache.cached_decompose(topo, "all-reduce", 1e6, group)
+    b = plancache.cached_decompose(topo, "all-reduce", 1e6, group)
+    assert a is b                              # same shared object
+    s = plancache.stats()
+    assert s["misses"] == 1 and s["hits"] == 1 and s["hit_rate"] == 0.5
+    # the cached plan equals a fresh decomposition (frozen dataclasses
+    # compare by value)
+    assert a == decompose(topo, "all-reduce", 1e6, group)
+
+
+def test_plancache_key_separates_specs_and_traffic(clean_plancache):
+    t1 = Topology(SystemSpec(pod_shape=(4, 4)))
+    t2 = Topology(SystemSpec(pod_shape=(8, 8)))
+    g = list(range(4))
+    k = sweep.plancache.plan_key
+    assert k(t1, "all-reduce", 1e6, g) != k(t2, "all-reduce", 1e6, g)
+    assert k(t1, "all-reduce", 1e6, g) != k(t1, "all-gather", 1e6, g)
+    assert k(t1, "all-reduce", 1e6, g) != k(t1, "all-reduce", 2e6, g)
+    assert k(t1, "all-reduce", 1e6, g) == k(t1, "all-reduce", 1e6, list(g))
+
+
+def test_plancache_disk_tier_survives_memory_clear(clean_plancache,
+                                                   tmp_path):
+    plancache.configure(str(tmp_path))
+    topo = Topology(SystemSpec(pod_shape=(4, 4)))
+    plancache.cached_decompose(topo, "all-gather", 2e6, list(range(4)))
+    assert any(f.endswith(".plan") for f in os.listdir(tmp_path))
+    plancache.clear(memory=True)               # fresh process analog
+    plancache.reset_stats()
+    plancache.cached_decompose(topo, "all-gather", 2e6, list(range(4)))
+    s = plancache.stats()
+    assert s["disk_hits"] == 1 and s["misses"] == 0

@@ -1,0 +1,2 @@
+# Makes tools/ importable (tests and benchmarks import tools.sweep);
+# every module here remains runnable as a plain script too.

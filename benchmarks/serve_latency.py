@@ -1,0 +1,210 @@
+"""Open-loop serving latency: the p50/p99-vs-offered-load knee, the
+scheduler x executor bit-identity matrix, and the straggler-link tail.
+
+Three sections, merged into ``BENCH_serve.json`` (read-merge-write, the
+BENCH idiom):
+
+* ``latency_curve`` -- p50/p99/goodput at each offered load on both
+  fabrics.  Below the knee latency is flat; past the aggregate service
+  capacity the queue grows for the whole trace window and p99 explodes.
+  The knee must be *visible*: p99 at the top load >= ``KNEE_GATE`` x
+  p99 at the bottom load.
+* ``bit_identity`` -- one serial oracle per fabric, then every round
+  scheduler x executor combination must reproduce its
+  ``ServeReport.summary()`` exactly (the serving analog of the replay
+  determinism gate).
+* ``fault_tail`` -- a straggler ICI link on tenant 0's ring under the
+  event fabric: global p99 and tenant 0's p99 must rise strictly above
+  healthy while tenant 1 (disjoint links) is bit-unchanged.  The same
+  plan on the analytic fabric is untargetable (ValueError) -- asserted.
+
+All gates are deterministic simulation quantities (no wall-clock), so
+they hold on any host.  ``--quick`` runs a smaller trace for CI and
+exits nonzero if any gate fails.
+
+Run as: PYTHONPATH=src:. python -m benchmarks.serve_latency [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from repro.core import SystemSpec
+from repro.serve.sim import build_scenario, run_serving
+
+SPEC = SystemSpec(pod_shape=(2, 2))
+SEED = 11
+DURATION_S = 0.02
+QUICK_DURATION_S = 0.008
+
+LOADS_FULL = (250.0, 500.0, 1000.0, 2000.0, 3000.0, 4000.0, 6000.0)
+LOADS_QUICK = (500.0, 2000.0, 4000.0)
+
+SCHED_X_EXEC = [(s, e) for s in ("batch", "lookahead", "bounded")
+                for e in ("threads", "procs")]
+SCHED_X_EXEC_QUICK = [("batch", "threads"), ("lookahead", "procs"),
+                      ("bounded", "procs")]
+
+STRAGGLER = {"fabric.pod0.ici[0,1]+x": [(0.0, "slow", 32.0)]}
+KNEE_GATE = 2.0          # p99(top load) / p99(bottom load), both fabrics
+FAULT_GATE = 1.05        # faulted tenant-0 p99 / healthy tenant-0 p99
+
+
+def _scenario(rate_rps: float, duration_s: float):
+    scen = build_scenario(SPEC, rate_rps=rate_rps, duration_s=duration_s,
+                          seed=SEED)
+    assert scen is not None
+    return scen
+
+
+def latency_curve(loads, duration_s: float) -> dict:
+    """p50/p99/goodput per offered load, analytic + event fabrics."""
+    rows = []
+    for rate in loads:
+        scen = _scenario(rate, duration_s)
+        row = {"rate_rps_per_tenant": rate}
+        for fabric in ("analytic", "event"):
+            t0 = time.perf_counter()
+            rep = run_serving(scen, spec=SPEC, fabric=fabric)
+            row[fabric] = {
+                "offered": rep.offered,
+                "offered_rps": round(rep.offered_rps, 1),
+                "completed": rep.completed,
+                "goodput_rps": round(rep.goodput_rps, 1),
+                "p50_ms": round(rep.p50_s * 1e3, 4),
+                "p99_ms": round(rep.p99_s * 1e3, 4),
+                "queue_mean_ms": round(rep.queue_mean_s * 1e3, 4),
+                "events": rep.events,
+                "wall_s": round(time.perf_counter() - t0, 3),
+            }
+        rows.append(row)
+    out = {"rows": rows}
+    for fabric in ("analytic", "event"):
+        lo, hi = rows[0][fabric]["p99_ms"], rows[-1][fabric]["p99_ms"]
+        out[f"knee_ratio_{fabric}"] = round(hi / lo, 2) if lo else None
+    return out
+
+
+def bit_identity(combos, duration_s: float, rate_rps: float = 1000.0) -> dict:
+    """Serial oracle per fabric; every scheduler x executor must match."""
+    scen = _scenario(rate_rps, duration_s)
+    results, identical = {}, True
+    for fabric in ("analytic", "event"):
+        oracle = run_serving(scen, spec=SPEC, fabric=fabric)
+        matrix = {}
+        for sched, executor in combos:
+            rep = run_serving(scen, spec=SPEC, fabric=fabric,
+                              scheduler=sched, executor=executor,
+                              max_workers=2)
+            ok = rep.summary() == oracle.summary()
+            matrix[f"{sched}+{executor}"] = ok
+            identical = identical and ok
+        results[fabric] = {"p99_ms": round(oracle.p99_s * 1e3, 4),
+                           "matrix": matrix}
+    results["bit_identical"] = identical
+    results["combos_per_fabric"] = len(combos)
+    return results
+
+
+def fault_tail(duration_s: float, rate_rps: float = 1000.0) -> dict:
+    """Straggler link vs healthy on the event fabric; analytic rejects."""
+    scen = _scenario(rate_rps, duration_s)
+    healthy = run_serving(scen, spec=SPEC, fabric="event")
+    faulted = run_serving(scen, spec=SPEC, fabric="event", faults=STRAGGLER)
+    try:
+        run_serving(scen, spec=SPEC, fabric="analytic", faults=STRAGGLER)
+        analytic_rejects = False
+    except ValueError:
+        analytic_rejects = True
+    t0h, t0f = healthy.tenant_p99_s[0], faulted.tenant_p99_s[0]
+    return {
+        "fault_plan": {k: [list(a) for a in v] for k, v in STRAGGLER.items()},
+        "healthy_p99_ms": round(healthy.p99_s * 1e3, 4),
+        "fault_p99_ms": round(faulted.p99_s * 1e3, 4),
+        "p99_ratio_fault_over_healthy": round(
+            faulted.p99_s / healthy.p99_s, 4) if healthy.p99_s else None,
+        "tenant0_p99_ratio": round(t0f / t0h, 4) if t0h else None,
+        "tenant1_unchanged": (faulted.tenant_p99_s[1]
+                              == healthy.tenant_p99_s[1]),
+        "p99_raised": faulted.p99_s > healthy.p99_s,
+        "completed_preserved": faulted.completed == healthy.completed,
+        "analytic_rejects_link_plan": analytic_rejects,
+    }
+
+
+def merge_bench(update: dict) -> str:
+    """Read-merge-write BENCH_serve.json (this benchmark owns all of it,
+    but quick and full runs write disjoint sections)."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(root, "BENCH_serve.json")
+    data = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            data = json.load(f)
+    data.update(update)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+    return path
+
+
+def _gates(curve: dict, ident: dict, fault: dict) -> bool:
+    return (ident["bit_identical"]
+            and curve["knee_ratio_analytic"] is not None
+            and curve["knee_ratio_analytic"] >= KNEE_GATE
+            and curve["knee_ratio_event"] >= KNEE_GATE
+            and fault["p99_raised"]
+            and fault["tenant0_p99_ratio"] >= FAULT_GATE
+            and fault["tenant1_unchanged"]
+            and fault["completed_preserved"]
+            and fault["analytic_rejects_link_plan"])
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: fewer load points, shorter traces, "
+                         "3 identity combos; writes *_quick sections and "
+                         "gates bit-identity + knee + fault-degrades-p99")
+    args = ap.parse_args(argv)
+
+    dur = QUICK_DURATION_S if args.quick else DURATION_S
+    loads = LOADS_QUICK if args.quick else LOADS_FULL
+    combos = SCHED_X_EXEC_QUICK if args.quick else SCHED_X_EXEC
+
+    curve = latency_curve(loads, dur)
+    ident = bit_identity(combos, dur)
+    fault = fault_tail(dur)
+
+    suffix = "_quick" if args.quick else ""
+    path = merge_bench({f"latency_curve{suffix}": curve,
+                        f"bit_identity{suffix}": ident,
+                        f"fault_tail{suffix}": fault})
+
+    print("rate_rps_per_tenant,fabric,offered,p50_ms,p99_ms,goodput_rps")
+    for row in curve["rows"]:
+        for fabric in ("analytic", "event"):
+            r = row[fabric]
+            print(f"{row['rate_rps_per_tenant']:.0f},{fabric},"
+                  f"{r['offered']},{r['p50_ms']},{r['p99_ms']},"
+                  f"{r['goodput_rps']}")
+    print(f"# knee: p99 top/bottom = {curve['knee_ratio_analytic']}x "
+          f"analytic, {curve['knee_ratio_event']}x event "
+          f"(gate >= {KNEE_GATE}x)")
+    print(f"# bit-identity: {ident['combos_per_fabric']} scheduler x "
+          f"executor combos per fabric, identical="
+          f"{ident['bit_identical']}")
+    print(f"# fault tail: straggler-link p99 "
+          f"{fault['fault_p99_ms']}ms vs healthy "
+          f"{fault['healthy_p99_ms']}ms (tenant0 ratio "
+          f"{fault['tenant0_p99_ratio']}x, tenant1 unchanged="
+          f"{fault['tenant1_unchanged']}, analytic rejects plan="
+          f"{fault['analytic_rejects_link_plan']})")
+    ok = _gates(curve, ident, fault)
+    print(f"# gates {'pass' if ok else 'FAIL'}; wrote {path}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -100,6 +100,16 @@ class AnalyticFabric(FabricBackend):
     def make_controller(self) -> FabricController:
         return AnalyticController("fabric.ctrl", self)
 
+    def link_report(self) -> dict:
+        # Under the procs executor the controller is shard-resident: the
+        # worker debits *its replica's* backend.topology, and end-of-run
+        # sync replaces controller.backend with that replica.  Read the
+        # report through the controller so the debits survive shard
+        # residency (the parent-held self.topology stays pristine there).
+        if self.controller is not None:
+            return self.controller.backend.topology.link_report()
+        return self.topology.link_report()
+
     def describe(self) -> dict:
         d = super().describe()
         d["batch_pricing"] = self.batch_pricing

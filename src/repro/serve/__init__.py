@@ -1,3 +1,16 @@
+"""Serving: the functional continuous-batching engine (real JAX decode,
+exactness oracle) and the open-loop serving *simulation* (timing model
+on the event engine/fabric — see docs/serving.md)."""
 from .engine import Engine, Request
+from .sim import (GENERATORS, ServeReport, ServeRequest, ServeSizing,
+                  ServingScenario, ServingSystem, SlotLedger, TenantSpec,
+                  build_scenario, bursty_trace, diurnal_trace, make_requests,
+                  poisson_trace, run_serving)
 
-__all__ = ["Engine", "Request"]
+__all__ = [
+    "Engine", "Request",
+    "GENERATORS", "ServeReport", "ServeRequest", "ServeSizing",
+    "ServingScenario", "ServingSystem", "SlotLedger", "TenantSpec",
+    "build_scenario", "bursty_trace", "diurnal_trace", "make_requests",
+    "poisson_trace", "run_serving",
+]

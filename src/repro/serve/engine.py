@@ -32,6 +32,7 @@ class Request:
     # filled by the engine:
     output: typing.List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    rejected: bool = False          # prompt too long for the cache
 
 
 # cache leaf -> batch axis (transformer/encdec/ssm/hybrid layouts)
@@ -62,6 +63,7 @@ class Engine:
         self.remaining: typing.Dict[int, int] = {}
         self.last_token = jnp.zeros((slots,), jnp.int32)
         self.queue: typing.List[Request] = []
+        self._finished_early: typing.List[Request] = []
         self.steps = 0
         self.prefills = 0
         self._decode = jax.jit(
@@ -70,17 +72,34 @@ class Engine:
             lambda p, c, b: api.prefill(p, cfg, c, b))
 
     # ------------------------------------------------------------------
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> bool:
+        """Queue a request.  Returns False (request marked done+rejected,
+        never queued) when the prompt cannot fit the cache: admitting it
+        would splice/decode past row ``max_seq-1``, and jax's clamping
+        ``.at[].set`` would silently corrupt the last cache row instead
+        of raising."""
+        if len(req.prompt) >= self.max_seq:
+            req.rejected = True
+            req.done = True
+            return False
         self.queue.append(req)
+        return True
 
     def _free_slots(self) -> typing.List[int]:
         return [s for s in range(self.slots) if s not in self.active]
 
     def _admit(self) -> None:
-        for slot in self._free_slots():
-            if not self.queue:
-                break
+        free = self._free_slots()
+        while free and self.queue:
             req = self.queue.pop(0)
+            if req.max_new_tokens <= 0:
+                # nothing to generate: complete immediately, never touch
+                # a slot (previously this pinned a slot through a decode
+                # and emitted two spurious tokens)
+                req.done = True
+                self._finished_early.append(req)
+                continue
+            slot = free[0]
             prompt = jnp.asarray(req.prompt, jnp.int32)[None]   # (1,S)
             mini = api.init_cache(self.cfg, 1, self.max_seq)
             logits, mini = self._prefill(self.params, mini,
@@ -89,6 +108,13 @@ class Engine:
             self._splice(mini, slot, int(prompt.shape[1]))
             tok = int(jnp.argmax(logits[0]))
             req.output.append(tok)
+            if tok == self.eos or req.max_new_tokens == 1:
+                # complete at admission: the prefill token is the whole
+                # answer, so the slot stays free for the next request
+                req.done = True
+                self._finished_early.append(req)
+                continue
+            free.pop(0)
             self.last_token = self.last_token.at[slot].set(tok)
             self.active[slot] = req
             self.remaining[slot] = req.max_new_tokens - 1
@@ -111,12 +137,12 @@ class Engine:
         """One engine iteration: admit -> batched decode -> retire.
         Returns requests completed this step."""
         self._admit()
+        done, self._finished_early = self._finished_early, []
         if not self.active:
-            return []
+            return done
         logits, self.cache = self._decode(self.params, self.cache,
                                           self.last_token)
         self.steps += 1
-        done = []
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         # only active slots advance; idle slots re-decode garbage rows but
         # their outputs are ignored and their pos is reset on admission

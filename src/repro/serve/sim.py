@@ -1,0 +1,753 @@
+"""Open-loop multi-tenant LLM serving on the system model.
+
+This is the paper's case-study methodology (drive a realistic workload
+through the simulator, read end-to-end latency under contention) pointed
+at the serving workload the ROADMAP names: open-loop arrival traces feed
+per-tenant continuous-batching servers whose prefill/decode compute runs
+on :class:`~repro.core.chip.TensorCore` components and whose per-layer
+collectives go through the pluggable fabric — so two tenants sharing a
+pod contend on real links under ``fabric="event"``, and fault plans from
+``docs/faults.md`` degrade tail latency observably.
+
+Nothing here calls JAX: `repro.serve.engine` is the *functional* model
+(real decode steps, exactness oracle); this module is the *timing* model
+(simulator events sized from the model config).  Both implement Orca
+continuous batching: admission waits on free KV-cache slots, iterations
+batch every active request, slots release on completion.
+
+Determinism: arrival traces, prompt/decode lengths and all component
+logic are seeded and integer-timed, so ``ServeReport.summary()`` is
+bit-identical across every scheduler x executor combination — the same
+contract the rest of the engine holds (`tests/test_executor.py`).
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import math
+import typing
+
+import numpy as np
+
+from ..core.chip import ComputeJob, HbmController, TensorCore
+from ..core.component import Component
+from ..core.connection import Connection, Request
+from ..core.engine import Engine
+from ..core.event import Event
+from ..core.hooks import FaultInjector, MetricsHook
+from ..core.hw import SystemSpec, ps_to_s, s_to_ps
+from ..core.system import CollectiveCoordinator, StarConnection
+from ..models.base import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Arrival-trace generators (open loop: arrivals don't wait for completions)
+# ---------------------------------------------------------------------------
+
+def poisson_trace(rate_rps: float, duration_s: float, seed: int) -> np.ndarray:
+    """Homogeneous Poisson arrivals: exponential inter-arrival times."""
+    rng = np.random.default_rng(seed)
+    out, t = [], 0.0
+    while True:
+        t += rng.exponential(1.0 / rate_rps)
+        if t >= duration_s:
+            return np.asarray(out)
+        out.append(t)
+
+
+def bursty_trace(rate_rps: float, duration_s: float, seed: int,
+                 burst_factor: float = 4.0, dwell_s: float = None) -> np.ndarray:
+    """Two-state MMPP: a calm state at ``rate/burst_factor`` and a burst
+    state at ``rate*burst_factor``, with exponential dwell times.  Mean
+    rate stays near ``rate_rps`` (equal expected dwell in each state)."""
+    rng = np.random.default_rng(seed)
+    dwell = dwell_s if dwell_s is not None else max(duration_s / 8.0, 1e-6)
+    rates = (rate_rps / burst_factor, rate_rps * burst_factor)
+    state, t, next_switch = 0, 0.0, rng.exponential(dwell)
+    out = []
+    while t < duration_s:
+        dt = rng.exponential(1.0 / rates[state])
+        if t + dt >= next_switch:
+            t = next_switch
+            next_switch = t + rng.exponential(dwell)
+            state = 1 - state
+            continue
+        t += dt
+        if t >= duration_s:
+            break
+        out.append(t)
+    return np.asarray(out)
+
+
+def diurnal_trace(rate_rps: float, duration_s: float, seed: int,
+                  depth: float = 0.8, period_s: float = None) -> np.ndarray:
+    """Sinusoidally modulated Poisson process via thinning: instantaneous
+    rate ``rate*(1 + depth*sin)``, peak-rate candidates kept with
+    probability lambda(t)/lambda_max.  Models the day/night swing of an
+    open user population."""
+    rng = np.random.default_rng(seed)
+    period = period_s if period_s is not None else duration_s
+    lam_max = rate_rps * (1.0 + depth)
+    out, t = [], 0.0
+    while True:
+        t += rng.exponential(1.0 / lam_max)
+        if t >= duration_s:
+            return np.asarray(out)
+        lam = rate_rps * (1.0 + depth * math.sin(2.0 * math.pi * t / period))
+        if rng.uniform() * lam_max < lam:
+            out.append(t)
+
+
+GENERATORS: typing.Dict[str, typing.Callable] = {
+    "poisson": poisson_trace,
+    "bursty": bursty_trace,
+    "diurnal": diurnal_trace,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeRequest:
+    """One user request: arrival stamp plus pre-drawn lengths (the eos
+    position is drawn up front so timing never depends on token values)."""
+    uid: int
+    arrival_ps: int
+    prompt_len: int
+    decode_len: int          # decode iterations until eos/completion (>= 1)
+
+
+def make_requests(times_s: np.ndarray, seed: int,
+                  prompt_range: typing.Tuple[int, int] = (16, 64),
+                  decode_range: typing.Tuple[int, int] = (4, 12),
+                  ) -> typing.Tuple[ServeRequest, ...]:
+    """Attach seeded prompt/decode lengths to an arrival trace."""
+    rng = np.random.default_rng(seed)
+    n = len(times_s)
+    prompts = rng.integers(prompt_range[0], prompt_range[1] + 1, size=n)
+    decodes = rng.integers(decode_range[0], decode_range[1] + 1, size=n)
+    return tuple(
+        ServeRequest(uid=i, arrival_ps=s_to_ps(float(t)),
+                     prompt_len=int(p), decode_len=int(d))
+        for i, (t, p, d) in enumerate(zip(times_s, prompts, decodes)))
+
+
+# ---------------------------------------------------------------------------
+# Scenario description + collective/compute sizing from the model config
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One tenant: a model served tensor-parallel over ``devices`` with
+    ``slots`` KV-cache slots and an open-loop request trace."""
+    name: str
+    devices: typing.Tuple[int, ...]
+    model: ModelConfig
+    slots: int
+    requests: typing.Tuple[ServeRequest, ...]
+    coll_ops: int = 4        # decode allreduces per iteration (layer groups)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingScenario:
+    name: str
+    tenants: typing.Tuple[TenantSpec, ...]
+
+
+class ServeSizing:
+    """Deterministic op sizing for one tenant.  Flops/bytes are roofline
+    inputs for :class:`TensorCore`; collective payloads are exact ints so
+    the byte counts noted to the fabric up front match the issued joins
+    bit-for-bit (the event fabric's planned-edge guard requires it)."""
+
+    def __init__(self, tenant: TenantSpec) -> None:
+        m = tenant.model
+        self.tp = max(1, len(tenant.devices))
+        d_ff = m.d_ff if m.d_ff else 4 * m.d_model
+        layers = max(1, m.num_layers)
+        self.params = (layers * (4 * m.d_model * m.d_model
+                                 + 2 * m.d_model * d_ff)
+                       + m.vocab_size * m.d_model)
+        self.param_bytes = 2.0 * self.params          # bf16 weights
+        self.d_model = m.d_model
+        self.coll_ops = max(1, min(tenant.coll_ops, layers))
+        self.layers_per_op = max(1, layers // self.coll_ops)
+        self.moe = m.family == "moe" and m.num_experts > 1
+        self.ept = max(1, m.experts_per_token)
+
+    # compute (per device; tensor-parallel shards weights 1/tp)
+    def prefill_flops(self, prompt_len: int) -> float:
+        return 2.0 * self.params * prompt_len / self.tp
+
+    def prefill_hbm(self, prompt_len: int) -> float:
+        return self.param_bytes / self.tp
+
+    def decode_flops(self, batch: int) -> float:
+        return 2.0 * self.params * batch / self.tp
+
+    def decode_hbm(self, batch: int) -> float:
+        # weight-streaming bound + a token of KV per active request
+        return self.param_bytes / self.tp + 2.0 * batch * self.d_model
+
+    # collectives (exact ints; one activation row per active request)
+    def ar_bytes(self, batch: int) -> int:
+        return int(batch) * self.d_model * 2 * self.layers_per_op
+
+    def a2a_bytes(self, batch: int) -> int:
+        return int(batch) * self.d_model * 2 * self.ept
+
+
+# ---------------------------------------------------------------------------
+# Slot ledger: KV-cache capacity as pure, property-testable accounting
+# ---------------------------------------------------------------------------
+
+class SlotLedger:
+    """KV-cache slots as schedulable capacity.  Pure bookkeeping (no
+    engine dependency) so hypothesis can drive random admit/release
+    interleavings against the invariants: occupancy never exceeds
+    capacity, no uid is lost or double-completed, lowest free slot wins
+    (deterministic placement)."""
+
+    def __init__(self, capacity: int) -> None:
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self.free: typing.List[int] = list(range(capacity))
+        self.active: typing.Dict[int, int] = {}      # slot -> uid
+        self.seated: typing.Dict[int, int] = {}      # uid -> slot
+        self.completed: set = set()
+        self.peak = 0
+
+    @property
+    def in_use(self) -> int:
+        return len(self.active)
+
+    def has_free(self) -> bool:
+        return bool(self.free)
+
+    def admit(self, uid: int) -> int:
+        if uid in self.seated:
+            raise ValueError(f"uid {uid} already seated")
+        if uid in self.completed:
+            raise ValueError(f"uid {uid} already completed")
+        if not self.free:
+            raise RuntimeError("admit with no free slot")
+        slot = self.free.pop(0)                       # lowest slot first
+        self.active[slot] = uid
+        self.seated[uid] = slot
+        self.peak = max(self.peak, len(self.active))
+        return slot
+
+    def release(self, uid: int) -> int:
+        if uid in self.completed:
+            raise ValueError(f"uid {uid} double-completed")
+        slot = self.seated.pop(uid, None)
+        if slot is None:
+            raise ValueError(f"uid {uid} not seated")
+        del self.active[slot]
+        self.completed.add(uid)
+        bisect.insort(self.free, slot)
+        return slot
+
+
+class _ReqLog:
+    """Mutable per-request timing record (all integer picoseconds, so
+    queue + prefill + decode == end-to-end exactly, no float residue)."""
+    __slots__ = ("uid", "arrival_ps", "prompt_len", "decode_len",
+                 "admit_ps", "first_ps", "done_ps", "remaining")
+
+    def __init__(self, req: ServeRequest) -> None:
+        self.uid = req.uid
+        self.arrival_ps = req.arrival_ps
+        self.prompt_len = req.prompt_len
+        self.decode_len = req.decode_len
+        self.admit_ps = None
+        self.first_ps = None
+        self.done_ps = None
+        self.remaining = req.decode_len
+
+    def __getstate__(self):
+        return {s: getattr(self, s) for s in self.__slots__}
+
+    def __setstate__(self, state):
+        for k, v in state.items():
+            setattr(self, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Components: per-chip serving program + per-tenant batching server
+# ---------------------------------------------------------------------------
+
+class ServeProgram(Component):
+    """One chip's slice of a tenant: executes the iteration's op list
+    (prefill/decode compute on its TensorCore, collective joins through
+    the coordinator star) and reports phase completion to its tenant
+    server.  Mirrors DeviceProgram's issue/wait loop, but the "trace" is
+    re-sent every iteration by the server (DP-3: only connections carry
+    cross-component traffic)."""
+
+    def __init__(self, name: str, device: int,
+                 group: typing.Tuple[int, ...]) -> None:
+        super().__init__(name)
+        self.device = device
+        self.group = tuple(group)
+        self.ops: tuple = ()
+        self.pc = 0
+        self.iter_id = -1
+        self.phases_done = 0
+
+    def start(self) -> None:
+        self.schedule("hello")
+
+    def handle(self, event: Event) -> None:
+        if event.kind == "hello":
+            # Register with the tenant server (spoke->hub auto-routes);
+            # the reference rides the payload like coordinator joins do,
+            # surviving the procs executor as a rank.
+            self.port("ctrl").send(Request(
+                src=self.port("ctrl"), dst=None, kind="register",
+                payload=(self.device, self)))
+            return
+        if event.kind != "request":
+            return
+        req = event.payload
+        if req.kind == "phase":
+            self.iter_id, self.ops = req.payload
+            self.pc = 0
+            self._issue()
+        elif req.kind in ("compute_done", "collective_done"):
+            self.pc += 1
+            self._issue()
+
+    def _issue(self) -> None:
+        if self.pc >= len(self.ops):
+            self.phases_done += 1
+            self.port("ctrl").send(Request(
+                src=self.port("ctrl"), dst=None, kind="phase_done",
+                payload=self.iter_id))
+            return
+        op = self.ops[self.pc]
+        if op[0] == "compute":
+            _, tag, flops, hbm_bytes = op
+            self.port("core").send(Request(
+                src=self.port("core"), dst=None, kind="job",
+                payload=ComputeJob(flops=flops, hbm_bytes=hbm_bytes,
+                                   tag=tag, reply_to=self)))
+        else:  # ("coll", name, kind, nbytes)
+            _, name, kind, nbytes = op
+            self.port("coll").send(Request(
+                src=self.port("coll"), dst=None, kind="join",
+                size_bytes=int(nbytes),
+                payload=(name, 0, kind, float(nbytes), self.group,
+                         self.device, self)))
+
+
+class TenantServer(Component):
+    """Per-tenant continuous-batching scheduler (the Orca loop as
+    simulator events).  Each iteration: admit queued requests into free
+    KV slots, broadcast one op list (new prefills + one batched decode +
+    its collectives) to every member chip, wait for all phase_done
+    replies, then retire finished requests and start the next iteration.
+    Open loop: arrivals are pre-scheduled self-events from the trace and
+    never wait on completions."""
+
+    def __init__(self, name: str, tenant: TenantSpec) -> None:
+        super().__init__(name)
+        self.tenant = tenant
+        self.sizing = ServeSizing(tenant)
+        self.ledger = SlotLedger(tenant.slots)
+        self.members: typing.Dict[int, object] = {}    # device -> program
+        self.queue: typing.List[int] = []              # waiting uids (FIFO)
+        self.recs: typing.Dict[int, _ReqLog] = {
+            r.uid: _ReqLog(r) for r in tenant.requests}
+        self.completed_order: typing.List[int] = []
+        self.iter_id = -1
+        self.iterations = 0
+        self._phase_replies = 0
+        self._newly: typing.List[int] = []
+
+    def start(self) -> None:
+        for r in self.tenant.requests:
+            self.schedule("arrival", r.arrival_ps, payload=r.uid)
+
+    def handle(self, event: Event) -> None:
+        if event.kind == "arrival":
+            self.queue.append(event.payload)
+            self._maybe_iterate()
+        elif event.kind == "request":
+            req = event.payload
+            if req.kind == "register":
+                device, prog = req.payload
+                self.members[device] = prog
+                self._maybe_iterate()
+            elif req.kind == "phase_done":
+                self._phase_replies -= 1
+                if self._phase_replies == 0:
+                    self._finish_iteration()
+
+    # -- the Orca iteration ------------------------------------------------
+    def _maybe_iterate(self) -> None:
+        if self._phase_replies:                  # iteration in flight
+            return
+        if len(self.members) < len(self.tenant.devices):
+            return                               # chips still registering
+        admitted = []
+        while self.queue and self.ledger.has_free():
+            uid = self.queue.pop(0)
+            self.ledger.admit(uid)
+            rec = self.recs[uid]
+            rec.admit_ps = self.engine.now
+            admitted.append(uid)
+        if not self.ledger.in_use:
+            return                               # idle until next arrival
+        self.iter_id += 1
+        self.iterations += 1
+        self._newly = admitted
+        ops = self._build_ops(admitted)
+        self._phase_replies = len(self.members)
+        for d in sorted(self.members):
+            self.port("ctrl").send(Request(
+                src=self.port("ctrl"), dst=self.members[d], kind="phase",
+                payload=(self.iter_id, ops)))
+
+    def _build_ops(self, admitted: typing.List[int]) -> tuple:
+        s = self.sizing
+        it = self.iter_id
+        ops = []
+        for uid in admitted:
+            rec = self.recs[uid]
+            ops.append(("compute", f"{self.name}.i{it}.prefill{uid}",
+                        s.prefill_flops(rec.prompt_len),
+                        s.prefill_hbm(rec.prompt_len)))
+        batch = self.ledger.in_use
+        ops.append(("compute", f"{self.name}.i{it}.decode",
+                    s.decode_flops(batch), s.decode_hbm(batch)))
+        if len(self.tenant.devices) > 1:
+            for k in range(s.coll_ops):
+                ops.append(("coll", f"{self.name}.i{it}.ar{k}",
+                            "all-reduce", s.ar_bytes(batch)))
+            if s.moe:
+                # MoE dispatch + combine: two a2a per iteration
+                ops.append(("coll", f"{self.name}.i{it}.a2a0",
+                            "all-to-all", s.a2a_bytes(batch)))
+                ops.append(("coll", f"{self.name}.i{it}.a2a1",
+                            "all-to-all", s.a2a_bytes(batch)))
+        return tuple(ops)
+
+    def _finish_iteration(self) -> None:
+        now = self.engine.now
+        for uid in self._newly:
+            self.recs[uid].first_ps = now        # first token this iteration
+        self._newly = []
+        for slot, uid in sorted(self.ledger.active.items()):
+            rec = self.recs[uid]
+            rec.remaining -= 1
+            if rec.remaining <= 0:               # pre-drawn eos reached
+                rec.done_ps = now
+                self.ledger.release(uid)
+                self.completed_order.append(uid)
+        self._maybe_iterate()
+
+
+# ---------------------------------------------------------------------------
+# System assembly
+# ---------------------------------------------------------------------------
+
+class ServingSystem:
+    """A machine wired for serving: shared coordinator + fabric, plus per
+    tenant a :class:`TenantServer` on its own control star and per device
+    a fresh TensorCore/HbmController/ServeProgram triple.  Chips are
+    wired exactly like :class:`repro.core.system.System` (2-endpoint
+    buses so request auto-routing holds); tenants share the fabric, which
+    is where multi-tenant link contention comes from."""
+
+    def __init__(self, scenario: ServingScenario, spec: SystemSpec,
+                 scheduler=None, max_workers: int = 4, fabric=None,
+                 executor=None) -> None:
+        from ..fabric import make_fabric   # late: fabric imports core modules
+        seen: set = set()
+        for t in scenario.tenants:
+            if not t.devices:
+                raise ValueError(f"tenant {t.name!r} has no devices")
+            for d in t.devices:
+                if not 0 <= d < spec.total_chips:
+                    raise ValueError(
+                        f"tenant {t.name!r} device {d} outside "
+                        f"topology with {spec.total_chips} chips")
+                if d in seen:
+                    raise ValueError(
+                        f"device {d} assigned to two tenants; tenant "
+                        f"placements must be disjoint")
+                seen.add(d)
+        self.scenario = scenario
+        self.spec = spec
+        self.engine = Engine(scheduler=scheduler, max_workers=max_workers,
+                             executor=executor)
+        self.fabric = make_fabric(fabric or spec.fabric, spec)
+        self.coordinator = self.engine.register(
+            CollectiveCoordinator("coordinator"))
+        self.fabric.install(self.engine, self.coordinator)
+        coll_conn = self.engine.register(
+            StarConnection("coll_fabric", self.coordinator.port("coll"),
+                           latency_s=spec.ctrl_latency_s))
+        self.servers: typing.List[TenantServer] = []
+        self.programs: typing.List[ServeProgram] = []
+        self.cores: typing.List[TensorCore] = []
+        self.hbms: typing.List[HbmController] = []
+        for tid, tenant in enumerate(scenario.tenants):
+            server = self.engine.register(
+                TenantServer(f"tenant{tid}.server", tenant))
+            ctrl = self.engine.register(
+                StarConnection(f"tenant{tid}.ctrl", server.port("ctrl"),
+                               latency_s=spec.ctrl_latency_s))
+            for d in tenant.devices:
+                core = self.engine.register(
+                    TensorCore(f"chip{d}.core", spec.chip))
+                hbm = self.engine.register(
+                    HbmController(f"chip{d}.hbm", spec.chip))
+                prog = self.engine.register(
+                    ServeProgram(f"chip{d}.prog", d, tenant.devices))
+                self.engine.register(Connection(f"chip{d}.bus")).plug(
+                    prog.port("core")).plug(core.port("prog"))
+                self.engine.register(Connection(f"chip{d}.membus")).plug(
+                    core.port("hbm")).plug(hbm.port("cpu"))
+                coll_conn.plug(prog.port("coll"))
+                ctrl.plug(prog.port("ctrl"))
+                self.programs.append(prog)
+                self.cores.append(core)
+                self.hbms.append(hbm)
+            self.servers.append(server)
+            # Advance notice of every collective this tenant can issue
+            # (batch sizes 1..slots): the event fabric refines bounded-lag
+            # edges from these exact (kind, bytes, group) triples, and its
+            # strict-window guard fails loudly on an un-noted collective.
+            if len(tenant.devices) > 1:
+                s = ServeSizing(tenant)
+                for b in range(1, tenant.slots + 1):
+                    self.fabric.note_plan("all-reduce", float(s.ar_bytes(b)),
+                                          tuple(tenant.devices))
+                    if s.moe:
+                        self.fabric.note_plan("all-to-all",
+                                              float(s.a2a_bytes(b)),
+                                              tuple(tenant.devices))
+
+    def run(self, until_s: float = None) -> int:
+        for prog in self.programs:
+            prog.start()
+        for server in self.servers:
+            server.start()
+        return self.engine.run(s_to_ps(until_s) if until_s else None)
+
+
+# ---------------------------------------------------------------------------
+# Report + driver
+# ---------------------------------------------------------------------------
+
+def _pctile_ps(values_ps: typing.List[int], q: float) -> float:
+    """Nearest-rank percentile in seconds (deterministic, no interpolation)."""
+    if not values_ps:
+        return 0.0
+    v = sorted(values_ps)
+    k = max(0, math.ceil(q / 100.0 * len(v)) - 1)
+    return ps_to_s(v[k])
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """One serving run.  ``summary()`` excludes execution artifacts so it
+    is bit-identical across schedulers and executors, same as SimReport."""
+    time_s: float                  # makespan (last event)
+    events: int
+    devices: int
+    tenants: int
+    offered: int                   # requests in the arrival traces
+    completed: int
+    in_flight: int                 # admitted but unfinished at horizon
+    queued: int                    # never admitted by the horizon
+    offered_rps: float
+    goodput_rps: float             # completed / makespan
+    p50_s: float
+    p99_s: float
+    mean_s: float
+    max_s: float
+    queue_mean_s: float            # arrival -> admission
+    prefill_mean_s: float          # admission -> first token
+    decode_mean_s: float           # first token -> completion
+    iterations: int
+    peak_slots: typing.List[int]   # per tenant
+    collectives_completed: int
+    compute_busy_s: float
+    compute_util: float
+    link_report: dict
+    fabric: str = "analytic"
+    link_utilization: dict = dataclasses.field(default_factory=dict)
+    # per-tenant SLO view: a fault on one tenant's links must show up in
+    # that tenant's tail even when another tenant owns the global max
+    tenant_p50_s: typing.List[float] = dataclasses.field(default_factory=list)
+    tenant_p99_s: typing.List[float] = dataclasses.field(default_factory=list)
+    per_request: list = dataclasses.field(default_factory=list)
+    scheduler: str = "serial"
+    executor: str = "none"
+
+    _EXECUTION_FIELDS = ("scheduler", "executor")
+
+    def summary(self) -> dict:
+        return {k: v for k, v in dataclasses.asdict(self).items()
+                if k not in self._EXECUTION_FIELDS}
+
+
+def run_serving(scenario: ServingScenario, spec: SystemSpec = None,
+                scheduler: str = None, max_workers: int = 4,
+                fabric: str = None, executor: str = None,
+                faults: dict = None, until_s: float = None) -> ServeReport:
+    """Run one open-loop serving scenario and report the latency curve
+    inputs.  Mirrors :func:`repro.core.simulate.simulate`'s fault-plan
+    handling: same grammar, same validation, ``fabric.*`` targets need
+    the event fabric."""
+    spec = spec or SystemSpec()
+    system = ServingSystem(scenario, spec, scheduler=scheduler,
+                           max_workers=max_workers, fabric=fabric,
+                           executor=executor)
+    metrics = MetricsHook()
+    system.engine.accept_hook(metrics)   # engine-level only (no fusing)
+    if faults:
+        plan = {name: [(s_to_ps(t), a,
+                        s_to_ps(arg) if a == "transient" else arg)
+                       for (t, a, arg) in acts]
+                for name, acts in faults.items()}
+        targets = (system.cores + system.programs + system.servers
+                   + system.fabric.fault_targets())
+        unknown = set(plan) - {c.name for c in targets}
+        if unknown:
+            raise ValueError(
+                f"fault plan targets unknown components "
+                f"{sorted(unknown)}; serving targets are chipN.core / "
+                f"chipN.prog / tenantN.server, and fabric.* link/DMA "
+                f"targets require fabric='event' (this run uses "
+                f"{system.fabric.name!r})")
+        inj = FaultInjector(plan)
+        for comp in targets:
+            comp.accept_hook(inj)
+
+    end_ps = system.run(until_s=until_s)
+    time_s = ps_to_s(end_ps)
+
+    per_request = []
+    e2e, queue_t, prefill_t, decode_t = [], [], [], []
+    tenant_e2e: typing.List[list] = [[] for _ in system.servers]
+    offered = completed = in_flight = queued = 0
+    for tid, server in enumerate(system.servers):
+        for uid in sorted(server.recs):
+            rec = server.recs[uid]
+            offered += 1
+            if rec.done_ps is None:
+                if rec.admit_ps is None:
+                    queued += 1
+                else:
+                    in_flight += 1
+                continue
+            completed += 1
+            q = rec.admit_ps - rec.arrival_ps
+            p = rec.first_ps - rec.admit_ps
+            d = rec.done_ps - rec.first_ps
+            e2e.append(rec.done_ps - rec.arrival_ps)
+            tenant_e2e[tid].append(rec.done_ps - rec.arrival_ps)
+            queue_t.append(q)
+            prefill_t.append(p)
+            decode_t.append(d)
+            per_request.append({
+                "tenant": tid, "uid": uid,
+                "arrival_s": ps_to_s(rec.arrival_ps),
+                "queue_s": ps_to_s(q), "prefill_s": ps_to_s(p),
+                "decode_s": ps_to_s(d),
+                "e2e_s": ps_to_s(rec.done_ps - rec.arrival_ps),
+                "prompt_len": rec.prompt_len,
+                "decode_len": rec.decode_len,
+            })
+
+    busy = max((metrics.busy_ps[c.name] for c in system.cores), default=0)
+    span_s = max((float(r.arrival_ps) for t in scenario.tenants
+                  for r in t.requests), default=0.0) / 1e12
+    return ServeReport(
+        time_s=time_s,
+        events=system.engine.events_processed,
+        devices=len(system.programs),
+        tenants=len(system.servers),
+        offered=offered,
+        completed=completed,
+        in_flight=in_flight,
+        queued=queued,
+        offered_rps=offered / span_s if span_s else 0.0,
+        goodput_rps=completed / time_s if time_s else 0.0,
+        p50_s=_pctile_ps(e2e, 50.0),
+        p99_s=_pctile_ps(e2e, 99.0),
+        mean_s=ps_to_s(int(sum(e2e) / len(e2e))) if e2e else 0.0,
+        max_s=ps_to_s(max(e2e)) if e2e else 0.0,
+        queue_mean_s=ps_to_s(int(sum(queue_t) / len(queue_t))) if queue_t else 0.0,
+        prefill_mean_s=ps_to_s(int(sum(prefill_t) / len(prefill_t))) if prefill_t else 0.0,
+        decode_mean_s=ps_to_s(int(sum(decode_t) / len(decode_t))) if decode_t else 0.0,
+        iterations=sum(s.iterations for s in system.servers),
+        peak_slots=[s.ledger.peak for s in system.servers],
+        tenant_p50_s=[_pctile_ps(v, 50.0) for v in tenant_e2e],
+        tenant_p99_s=[_pctile_ps(v, 99.0) for v in tenant_e2e],
+        collectives_completed=system.coordinator.completed,
+        compute_busy_s=busy / 1e12,
+        compute_util=(busy / 1e12) / time_s if time_s else 0.0,
+        link_report=system.fabric.link_report(),
+        fabric=system.fabric.name,
+        link_utilization=system.fabric.link_utilization(end_ps or None),
+        per_request=per_request,
+        scheduler=system.engine.scheduler.name,
+        executor=(system.engine.scheduler.executor.name
+                  if getattr(system.engine.scheduler, "executor", None)
+                  is not None else "none"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Scenario builders (sweepable: return None when the topology can't host)
+# ---------------------------------------------------------------------------
+
+def _dense_model(d_model: int = 1024, layers: int = 8) -> ModelConfig:
+    return ModelConfig(name="serve-dense", family="dense",
+                       num_layers=layers, d_model=d_model,
+                       num_heads=max(1, d_model // 128), d_ff=4 * d_model,
+                       vocab_size=32000)
+
+
+def _moe_model(d_model: int = 1024, layers: int = 8) -> ModelConfig:
+    return ModelConfig(name="serve-moe", family="moe",
+                       num_layers=layers, d_model=d_model,
+                       num_heads=max(1, d_model // 128), d_ff=4 * d_model,
+                       vocab_size=32000, num_experts=8, experts_per_token=2)
+
+
+def build_scenario(spec: SystemSpec, name: str = "serving",
+                   arrival: str = "poisson", rate_rps: float = 500.0,
+                   duration_s: float = 0.02, seed: int = 0,
+                   tenants: int = 2, slots: int = 4,
+                   prompt_range: typing.Tuple[int, int] = (16, 64),
+                   decode_range: typing.Tuple[int, int] = (4, 12),
+                   moe: bool = False,
+                   model: ModelConfig = None) -> typing.Optional[ServingScenario]:
+    """Place ``tenants`` tenants on contiguous row-blocks of pod 0 and
+    attach seeded open-loop traces.  Returns None when pod 0 hasn't a
+    row per tenant (sweep grids skip the combo, same contract as the
+    collective scenario builders in tools/sweep.py)."""
+    if arrival not in GENERATORS:
+        raise ValueError(f"unknown arrival generator {arrival!r}; "
+                         f"have {sorted(GENERATORS)}")
+    y, x = spec.pod_shape[0], spec.pod_shape[1]
+    rows_per = y // tenants
+    if rows_per < 1:
+        return None
+    model = model or (_moe_model() if moe else _dense_model())
+    specs = []
+    for tid in range(tenants):
+        devices = tuple(range(tid * rows_per * x, (tid + 1) * rows_per * x))
+        times = GENERATORS[arrival](rate_rps, duration_s,
+                                    seed=seed * 1000 + tid)
+        reqs = make_requests(times, seed=seed * 1000 + tid + 500,
+                             prompt_range=prompt_range,
+                             decode_range=decode_range)
+        specs.append(TenantSpec(name=f"{name}.t{tid}", devices=devices,
+                                model=model, slots=slots, requests=reqs))
+    return ServingScenario(name=name, tenants=tuple(specs))

@@ -93,6 +93,21 @@ def test_executors_identical_on_event_fabric(executor):
     assert oracle.compute_busy_s > 0     # the metrics hook saw the run
 
 
+@pytest.mark.parametrize("executor", EXECUTOR_VARIANTS)
+def test_analytic_link_report_survives_executor(executor):
+    """The analytic controller debits its backend's topology counters;
+    under procs those live in the shard replica, and the report must
+    read through the synced-back controller -- a procs run used to
+    return an empty link_report while serial had the debits."""
+    kw = dict(cost=_ar_cost(), spec=SMALL, device_limit=None,
+              fabric="analytic")
+    oracle = simulate(scheduler="serial", **kw)
+    assert oracle.link_report["hottest_links"]        # debits present
+    rep = simulate(scheduler="batch", executor=executor, **kw)
+    assert rep.link_report == oracle.link_report
+    assert rep.summary() == oracle.summary()
+
+
 def _ar_cost():
     from repro.core.hlo import CollectiveRecord, HloCost, TraceOp
     ops, colls = [], []

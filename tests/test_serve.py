@@ -63,3 +63,75 @@ def test_requests_respect_max_seq_cap():
     done = eng.run_until_drained()
     assert done[0].done
     assert len(done[0].output) <= 12 - 8 + 1
+
+
+# -- edge cases the seed suite missed ----------------------------------------
+
+def test_oversized_prompt_rejected_not_spliced():
+    """A prompt of length >= max_seq must be rejected at submit: splicing
+    it would clamp writes into the last cache row (jax .at[].set is
+    silent on out-of-bounds) and corrupt whoever shares the pool."""
+    cfg = get_config("qwen2-1.5b-smoke")
+    params = api.init(RNG, cfg)
+    eng = Engine(cfg, params, slots=2, max_seq=8)
+    too_long = Request(uid=0, prompt=np.arange(8, dtype=np.int32),
+                       max_new_tokens=4)
+    assert eng.submit(too_long) is False
+    assert too_long.rejected and too_long.done and too_long.output == []
+    assert eng.stats()["queued"] == 0          # never entered the queue
+
+    # and the rejection must not perturb a co-resident request:
+    prompt = np.array([3, 1, 4], np.int32)
+    ref = _greedy_reference(cfg, params, prompt, 4, max_seq=8)
+    ok = Request(uid=1, prompt=prompt, max_new_tokens=4)
+    assert eng.submit(ok) is True
+    done = eng.run_until_drained()
+    assert [r.uid for r in done] == [1]
+    assert done[0].output == ref and not done[0].rejected
+
+
+def test_zero_max_new_tokens_completes_immediately():
+    """max_new_tokens=0 has nothing to generate: it must complete on the
+    admission pass with an empty output instead of occupying a slot
+    through a decode step (the seed engine emitted 2 tokens for it)."""
+    cfg = get_config("qwen2-1.5b-smoke")
+    params = api.init(RNG, cfg)
+    eng = Engine(cfg, params, slots=1, max_seq=48)
+    eng.submit(Request(uid=0, prompt=np.array([1, 2], np.int32),
+                       max_new_tokens=0))
+    done = eng.step()
+    assert [r.uid for r in done] == [0]
+    assert done[0].done and done[0].output == []
+    assert eng.stats()["active"] == 0 and eng.stats()["prefills"] == 0
+    assert eng.stats()["decode_steps"] == 0    # no decode was spent on it
+
+
+def test_zero_max_new_does_not_starve_the_slot():
+    """With one slot, a zero-token request ahead of a real one must not
+    block it (the seed engine pinned the slot for an iteration)."""
+    cfg = get_config("qwen2-1.5b-smoke")
+    params = api.init(RNG, cfg)
+    eng = Engine(cfg, params, slots=1, max_seq=48)
+    eng.submit(Request(uid=0, prompt=np.array([1], np.int32),
+                       max_new_tokens=0))
+    eng.submit(Request(uid=1, prompt=np.array([2, 3], np.int32),
+                       max_new_tokens=3))
+    done = eng.step()                          # one iteration admits both
+    assert 0 in {r.uid for r in done}
+    done += eng.run_until_drained()
+    by_uid = {r.uid: r for r in done}
+    assert len(by_uid[1].output) == 3 and by_uid[1].done
+
+
+def test_single_token_request_stops_at_prefill():
+    """max_new_tokens=1 is satisfied by the prefill argmax alone; the
+    seed engine over-generated a second token and burned a decode."""
+    cfg = get_config("qwen2-1.5b-smoke")
+    params = api.init(RNG, cfg)
+    prompt = np.array([5, 6, 7], np.int32)
+    ref = _greedy_reference(cfg, params, prompt, 1)
+    eng = Engine(cfg, params, slots=2, max_seq=48)
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=1))
+    done = eng.run_until_drained()
+    assert done[0].output == ref and len(done[0].output) == 1
+    assert eng.stats()["decode_steps"] == 0

@@ -62,6 +62,7 @@ from repro.core import SystemSpec, simulate               # noqa: E402
 from repro.core.hlo import CollectiveRecord, HloCost, TraceOp  # noqa: E402
 from repro.core.hw import ChipSpec                        # noqa: E402
 from repro.fabric import plancache                        # noqa: E402
+from repro.serve import sim as serve_sim                  # noqa: E402
 
 
 # --------------------------------------------------------------------------
@@ -159,12 +160,60 @@ def scenario_multi_tenant(spec: SystemSpec, layers: int = 5) -> HloCost:
     return cost
 
 
+# -- serving scenarios (open-loop traces; see docs/serving.md) -------------
+# These return a ServingScenario instead of an HloCost; run_config
+# dispatches them to repro.serve.sim.run_serving, and their rows carry
+# p50/p99/goodput next to the shared columns.  None = can't host the
+# tenants on this topology (skipped at grid expansion, same contract).
+
+def scenario_serving_poisson(spec: SystemSpec):
+    """Two tenants, steady Poisson arrivals below the saturation knee."""
+    return serve_sim.build_scenario(spec, name="serving_poisson",
+                                    arrival="poisson", rate_rps=600.0,
+                                    duration_s=0.02, seed=11)
+
+
+def scenario_serving_overload(spec: SystemSpec):
+    """Same shape offered well past the knee: queue-dominated latency."""
+    return serve_sim.build_scenario(spec, name="serving_overload",
+                                    arrival="poisson", rate_rps=4000.0,
+                                    duration_s=0.02, seed=11)
+
+
+def scenario_serving_burst(spec: SystemSpec):
+    """MMPP bursts: calm/burst states stress admission + slot reuse."""
+    return serve_sim.build_scenario(spec, name="serving_burst",
+                                    arrival="bursty", rate_rps=600.0,
+                                    duration_s=0.02, seed=11)
+
+
+def scenario_serving_diurnal(spec: SystemSpec):
+    """Sinusoidal rate swing (day/night) over the trace window."""
+    return serve_sim.build_scenario(spec, name="serving_diurnal",
+                                    arrival="diurnal", rate_rps=600.0,
+                                    duration_s=0.02, seed=11)
+
+
+def scenario_serving_moe(spec: SystemSpec):
+    """MoE tenants: per-iteration a2a dispatch/combine rides the shared
+    bisection channel, the multi-tenant contention the event fabric
+    prices and analytic can't."""
+    return serve_sim.build_scenario(spec, name="serving_moe",
+                                    arrival="poisson", rate_rps=600.0,
+                                    duration_s=0.02, seed=11, moe=True)
+
+
 SCENARIOS = {
     "allreduce_ladder": scenario_allreduce_ladder,
     "ring_exchange": scenario_ring_exchange,
     "moe_alltoall": scenario_moe_alltoall,
     "cross_pod_sync": scenario_cross_pod_sync,
     "multi_tenant": scenario_multi_tenant,
+    "serving_poisson": scenario_serving_poisson,
+    "serving_overload": scenario_serving_overload,
+    "serving_burst": scenario_serving_burst,
+    "serving_diurnal": scenario_serving_diurnal,
+    "serving_moe": scenario_serving_moe,
 }
 
 
@@ -225,6 +274,17 @@ GRIDS = {
         "scheduler": ["serial"],
         "fabric": ["analytic", "event"],
         "faults": ["none", "slow_link"],
+        "sim": {"device_limit": None, "repeat_cap": 4},
+    },
+    # offered load x topology x scheduler x fabric x fault for the
+    # open-loop serving scenarios (docs/serving.md)
+    "serving": {
+        "scenario": ["serving_poisson", "serving_overload", "serving_burst",
+                     "serving_diurnal", "serving_moe"],
+        "topology": ["pod2x2", "pod4x4"],
+        "scheduler": ["serial", "bounded"],
+        "fabric": ["analytic", "event"],
+        "faults": ["none", "slow_link", "straggler_chip"],
         "sim": {"device_limit": None, "repeat_cap": 4},
     },
     # the fleet sweep: thousands of scenario points per CI run is the
@@ -317,6 +377,33 @@ def run_config(cfg: dict) -> dict:
     faults = FAULT_PLANS[cfg["faults"]](spec, cfg["fabric"])
     before = plancache.stats()
     t0 = time.perf_counter()
+    if isinstance(cost, serve_sim.ServingScenario):
+        rep = serve_sim.run_serving(cost, spec=spec,
+                                    scheduler=cfg["scheduler"],
+                                    fabric=cfg["fabric"],
+                                    faults=faults or None)
+        wall = time.perf_counter() - t0
+        after = plancache.stats()
+        return {
+            **{k: cfg[k] for k in ("config_id", "scenario", "topology",
+                                   "scheduler", "fabric", "faults")},
+            "time_s": rep.time_s,
+            "wall_s": round(wall, 4),
+            "events": rep.events,
+            "devices": rep.devices,
+            "collectives_completed": rep.collectives_completed,
+            "collective_timeouts": 0,
+            "compute_util": round(rep.compute_util, 4),
+            "offered": rep.offered,
+            "completed": rep.completed,
+            "offered_rps": round(rep.offered_rps, 2),
+            "goodput_rps": round(rep.goodput_rps, 2),
+            "p50_s": rep.p50_s,
+            "p99_s": rep.p99_s,
+            "queue_mean_s": rep.queue_mean_s,
+            "plan_lookups": after["lookups"] - before["lookups"],
+            "plan_misses": after["misses"] - before["misses"],
+        }
     rep = simulate(cost=cost, spec=spec, scheduler=cfg["scheduler"],
                    fabric=cfg["fabric"], faults=faults or None,
                    device_limit=cfg["sim"].get("device_limit"),

@@ -6,10 +6,21 @@ Uses the FaultInjector hook + collective-deadline detection to quantify:
   * failure detection latency: how long until survivors observe a
     collective timeout after a chip dies;
   * checkpoint-overhead trade-off: optimal checkpoint interval per MTBF
-    (Young's approximation) for the measured step/save times.
+    (Young's approximation) for the measured step/save times;
+  * serve-through-faults (``--quick``, the CI gate): a mid-trace chip
+    kill with recovery enabled must end with zero stuck requests and
+    goodput restored to within 5% of pre-fault — the quick gates from
+    ``benchmarks/serve_recovery.py``, run here so the workflow checks
+    detection *and* recovery in one step.
+
+``--quick`` trims the what-ifs (fewer straggler points, shorter
+workload) and exits nonzero if the recovery gate fails.
+
+Run as: PYTHONPATH=src:. python -m benchmarks.fault_tolerance [--quick]
 """
 from __future__ import annotations
 
+import argparse
 import math
 import sys
 
@@ -31,14 +42,20 @@ def _workload(n_devices: int, layers: int = 16) -> HloCost:
     return cost
 
 
-def main() -> int:
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: trimmed what-ifs + the serving "
+                         "recovery gate (nonzero exit on failure)")
+    args = ap.parse_args(argv)
+
     spec = SystemSpec(pod_shape=(4, 4))
-    cost = _workload(16)
+    cost = _workload(16, layers=8 if args.quick else 16)
     print("name,us_per_call,derived")
 
     base = simulate(cost=cost, spec=spec, device_limit=None)
     print(f"step_base,{base.time_s * 1e6:.1f},util={base.compute_util:.2f}")
-    for k in (1.5, 2.0, 4.0):
+    for k in ((2.0,) if args.quick else (1.5, 2.0, 4.0)):
         _, slow = what_if_straggler(cost, spec, device=5, slow_factor=k,
                                     device_limit=None)
         print(f"straggler_x{k},{slow.time_s * 1e6:.1f},"
@@ -57,6 +74,26 @@ def main() -> int:
         interval = math.sqrt(2 * save_s * mtbf_h * 3600)
         print(f"ckpt_interval_mtbf{mtbf_h:.0f}h,"
               f"{interval:.0f},steps={interval / step_s:.0f}")
+
+    if args.quick:
+        # the recovery gate: chip kill mid-trace, serve *through* it
+        from benchmarks.serve_recovery import AFFECTED_TENANT, run_quick_gate
+        gate = run_quick_gate()
+        for fabric in ("analytic", "event"):
+            a = gate["anatomy"][fabric]
+            print(f"recovery_{fabric},"
+                  f"{a['time_to_recovery_s'] * 1e6:.1f},"
+                  f"stuck={a['stuck']}|retries={a['retries']}"
+                  f"|recoveries={a['recoveries']}"
+                  f"|avail_t{AFFECTED_TENANT}="
+                  f"{a['tenant_availability'][AFFECTED_TENANT]}"
+                  f"|restore={a['restore_ratio']}")
+        ident = gate["identity"]
+        print(f"# mid-recovery identity: {ident['combos_per_fabric']} "
+              f"combos/fabric, identical={ident['bit_identical']}, "
+              f"cross-fabric={ident['cross_fabric_behavioral']}")
+        print(f"# recovery gates {'pass' if gate['ok'] else 'FAIL'}")
+        return 0 if gate["ok"] else 1
     return 0
 
 

@@ -1,0 +1,229 @@
+"""Serve-through-faults: a permanent chip kill mid-trace, end to end.
+
+A pod2x2 two-tenant trace loses ``chip1.prog`` (tenant 0's second chip)
+at t=1s.  The recovery layer (docs/faults.md "Detection & recovery")
+must detect the death via the collective deadline, abort and re-mesh
+the affected tenant onto its surviving chip, requeue the interrupted
+requests, and keep serving -- the run *completes* rather than stalling.
+
+Two sections, merged into ``BENCH_serve.json`` (read-merge-write, the
+BENCH idiom; ``--quick`` writes ``*_quick`` sections):
+
+* ``recovery`` -- the outage anatomy on both fabrics: zero stuck
+  requests, nonzero retries/recoveries, exactly one chip death,
+  availability < 1 only for the affected tenant, time-to-recovery, the
+  goodput dip inside the outage window, and the restore gate --
+  completions-per-arrival in the post-recovery window within
+  ``RESTORE_GATE`` of the pre-fault window.  (Per-arrival, not
+  per-second: with a fixed Poisson seed the offered rate itself
+  fluctuates window to window; normalizing by arrivals isolates what
+  recovery controls -- whether offered work still completes.)
+* ``recovery_identity`` -- the mid-recovery determinism matrix: per
+  fabric, every round scheduler x executor combination must reproduce
+  the serial oracle's ``ServeReport.summary()`` exactly, *while* the
+  trace contains a death + abort + re-mesh + requeue; across fabrics
+  the behavioral fields (everything but the fabric-artifact ones) must
+  match too.  Recovery control flow rides engine events, so the
+  determinism guarantee may not narrow under faults.
+
+All gates are deterministic simulation quantities (no wall-clock), so
+they hold on any host.  ``--quick`` shrinks the trace for CI and exits
+nonzero if any gate fails; ``benchmarks/fault_tolerance.py --quick``
+reuses the quick gates so the CI workflow runs them in one place.
+
+Run as: PYTHONPATH=src:. python -m benchmarks.serve_recovery [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.core import SystemSpec
+from repro.serve.sim import build_scenario, run_serving
+
+from benchmarks.serve_latency import merge_bench
+
+SPEC = SystemSpec(pod_shape=(2, 2))
+SEED = 11
+DEADLINE_S = 5e-4
+FAULT_CHIP = "chip1.prog"      # tenant 0's second chip on pod2x2
+AFFECTED_TENANT = 0
+
+# full: the acceptance trace -- kill at t=1s, ~1.4k requests; quick: the
+# same anatomy inside a 20ms CI-sized window (kill mid-iteration too).
+FULL = {"rate_rps": 300.0, "duration_s": 1.5, "fault_at_s": 1.0}
+QUICK = {"rate_rps": 600.0, "duration_s": 0.02, "fault_at_s": 5e-3}
+
+RESTORE_GATE = 0.95            # post-recovery completions-per-arrival
+                               # vs pre-fault, same faulted run
+
+MATRIX = [(s, e) for s in ("batch", "lookahead", "bounded")
+          for e in ("threads", "procs")]
+MATRIX_QUICK = [("batch", "threads"), ("lookahead", "procs"),
+                ("bounded", "procs")]
+
+# summary() fields that legitimately differ between fabrics (the fabric
+# names itself + its own bookkeeping); everything else must match
+_FABRIC_ARTIFACTS = ("events", "fabric", "link_report", "link_utilization")
+
+
+def _run(params: dict, fabric: str, **kw):
+    scen = build_scenario(SPEC, rate_rps=params["rate_rps"],
+                          duration_s=params["duration_s"], seed=SEED)
+    assert scen is not None
+    faults = {FAULT_CHIP: [(params["fault_at_s"], "fail", None)]}
+    return run_serving(scen, spec=SPEC, fabric=fabric, faults=faults,
+                       deadline_s=DEADLINE_S, recovery=True, **kw)
+
+
+def restore_ratio(rep, fault_at_s: float) -> dict:
+    """Goodput-restored metric: completions per arrival in the
+    post-recovery window over the same in the pre-fault window.  The
+    post window may exceed 1x (it also drains the requeued backlog);
+    an unrecovered tenant would roughly halve it."""
+    windows = rep.outage_windows[AFFECTED_TENANT]
+    recover_s = max((e for _, e in windows), default=fault_at_s)
+    done = [(r["arrival_s"], r["arrival_s"] + r["e2e_s"])
+            for r in rep.per_request]
+    pre_a = sum(1 for a, _ in done if a < fault_at_s)
+    pre_c = sum(1 for _, d in done if d < fault_at_s)
+    post_a = sum(1 for a, _ in done if a >= recover_s)
+    post_c = sum(1 for _, d in done if d >= recover_s)
+    pre = pre_c / pre_a if pre_a else 0.0
+    post = post_c / post_a if post_a else 0.0
+    return {
+        "time_to_recovery_s": round(recover_s - fault_at_s, 9),
+        "pre_fault_completions_per_arrival": round(pre, 4),
+        "post_recovery_completions_per_arrival": round(post, 4),
+        "restore_ratio": round(post / pre, 4) if pre else None,
+    }
+
+
+def recovery_anatomy(params: dict) -> dict:
+    """The outage view on both fabrics, plus every per-run gate."""
+    out = {"params": dict(params), "deadline_s": DEADLINE_S,
+           "fault_chip": FAULT_CHIP}
+    for fabric in ("analytic", "event"):
+        t0 = time.perf_counter()
+        rep = _run(params, fabric)
+        stuck = rep.offered - rep.completed - rep.dropped
+        restore = restore_ratio(rep, params["fault_at_s"])
+        avail = rep.tenant_availability
+        out[fabric] = {
+            "offered": rep.offered,
+            "completed": rep.completed,
+            "dropped": rep.dropped,
+            "stuck": stuck,
+            "retries": rep.retries,
+            "recoveries": rep.recoveries,
+            "rejoins": rep.rejoins,
+            "chip_deaths": rep.chip_deaths,
+            "collective_timeouts": rep.collective_timeouts,
+            "tenant_availability": [round(a, 6) for a in avail],
+            "tenant_outage_ms": [round(o * 1e3, 4)
+                                 for o in rep.tenant_outage_s],
+            "outage_windows_s": rep.outage_windows[AFFECTED_TENANT],
+            "goodput_in_outage_rps": round(rep.goodput_in_outage_rps, 2),
+            "goodput_outside_outage_rps": round(
+                rep.goodput_outside_outage_rps, 2),
+            "p99_ms": round(rep.p99_s * 1e3, 4),
+            "wall_s": round(time.perf_counter() - t0, 3),
+            **restore,
+            "gates": {
+                "zero_stuck": stuck == 0,
+                "retries_nonzero": rep.retries > 0,
+                "recovered": rep.recoveries >= 1,
+                "one_death": rep.chip_deaths == 1,
+                "availability_dips_only_affected": (
+                    avail[AFFECTED_TENANT] < 1.0
+                    and all(a == 1.0 for i, a in enumerate(avail)
+                            if i != AFFECTED_TENANT)),
+                "goodput_dip_visible": (rep.goodput_in_outage_rps
+                                        < rep.goodput_outside_outage_rps),
+                "goodput_restored": (
+                    restore["restore_ratio"] is not None
+                    and restore["restore_ratio"] >= RESTORE_GATE),
+            },
+        }
+    return out
+
+
+def recovery_identity(params: dict, combos) -> dict:
+    """Mid-recovery determinism: scheduler x executor per fabric, then
+    behavioral equality across fabrics."""
+    results, identical = {}, True
+    oracles = {}
+    for fabric in ("analytic", "event"):
+        oracle = _run(params, fabric)
+        oracles[fabric] = oracle.summary()
+        matrix = {}
+        for sched, executor in combos:
+            rep = _run(params, fabric, scheduler=sched, executor=executor,
+                       max_workers=2)
+            ok = rep.summary() == oracle.summary()
+            matrix[f"{sched}+{executor}"] = ok
+            identical = identical and ok
+        results[fabric] = {"retries": oracle.retries,
+                           "recoveries": oracle.recoveries,
+                           "p99_ms": round(oracle.p99_s * 1e3, 4),
+                           "matrix": matrix}
+    behave = {f: {k: v for k, v in s.items() if k not in _FABRIC_ARTIFACTS}
+              for f, s in oracles.items()}
+    results["cross_fabric_behavioral"] = behave["analytic"] == behave["event"]
+    results["bit_identical"] = identical
+    results["combos_per_fabric"] = len(combos)
+    return results
+
+
+def gates_pass(anatomy: dict, ident: dict) -> bool:
+    return (ident["bit_identical"]
+            and ident["cross_fabric_behavioral"]
+            and all(anatomy[f]["gates"].values()
+                    for f in ("analytic", "event")))
+
+
+def run_quick_gate() -> dict:
+    """The CI-sized recovery gate, callable from fault_tolerance.py:
+    returns {"anatomy", "identity", "ok"} for the quick trace."""
+    anatomy = recovery_anatomy(QUICK)
+    ident = recovery_identity(QUICK, MATRIX_QUICK)
+    return {"anatomy": anatomy, "identity": ident,
+            "ok": gates_pass(anatomy, ident)}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: 20ms trace, 3 identity combos; "
+                         "writes *_quick sections")
+    args = ap.parse_args(argv)
+
+    params = QUICK if args.quick else FULL
+    combos = MATRIX_QUICK if args.quick else MATRIX
+
+    anatomy = recovery_anatomy(params)
+    ident = recovery_identity(params, combos)
+
+    suffix = "_quick" if args.quick else ""
+    path = merge_bench({f"recovery{suffix}": anatomy,
+                        f"recovery_identity{suffix}": ident})
+
+    print("fabric,offered,completed,stuck,retries,recoveries,"
+          "availability_t0,time_to_recovery_ms,restore_ratio")
+    for fabric in ("analytic", "event"):
+        a = anatomy[fabric]
+        print(f"{fabric},{a['offered']},{a['completed']},{a['stuck']},"
+              f"{a['retries']},{a['recoveries']},"
+              f"{a['tenant_availability'][AFFECTED_TENANT]},"
+              f"{a['time_to_recovery_s'] * 1e3:.4f},{a['restore_ratio']}")
+    print(f"# identity: {ident['combos_per_fabric']} scheduler x executor "
+          f"combos per fabric mid-recovery, identical="
+          f"{ident['bit_identical']}, cross-fabric behavioral="
+          f"{ident['cross_fabric_behavioral']}")
+    ok = gates_pass(anatomy, ident)
+    print(f"# gates {'pass' if ok else 'FAIL'}; wrote {path}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -191,6 +191,24 @@ class FaultInjector(Hook):
     def __init__(self, plan: dict) -> None:
         self.plan = {k: sorted(self._expand(v)) for k, v in plan.items()}
 
+    def arm(self, components: typing.Iterable) -> None:
+        """Post a ``fault_wake`` self-event at every plan time of every
+        planned target, so actions apply *exactly on schedule* even when
+        no other traffic reaches the component.  Without this the lazy
+        pop in :meth:`func` only fires at the component's next event --
+        a ``recover`` on an idle, failed component (which receives
+        nothing: the engine drops its events) would apply late or never.
+        The wake rides the normal dispatch path: the hook applies due
+        actions at EVENT_START, then the (possibly just-recovered)
+        component handles a ``fault_wake`` event it may react to --
+        components that don't know the kind ignore it.  Call after the
+        targets accepted this hook, before ``engine.run()``."""
+        from .event import Event   # local: hooks must not import event at load
+        for comp in components:
+            for t, _action, _arg in self.plan.get(comp.name, ()):
+                comp.engine.post(Event(time=t, component=comp,
+                                       kind="fault_wake"))
+
     @staticmethod
     def _expand(actions):
         out = []

@@ -146,6 +146,7 @@ def simulate(hlo_text: str = None, cost: HloCost = None,
         inj = FaultInjector(plan)
         for comp in targets:
             comp.accept_hook(inj)
+        inj.arm(targets)   # actions apply on schedule even on idle targets
 
     runops = build_runops(cost, dtype_bits=dtype_bits, repeat_cap=repeat_cap)
     devices = _select_devices(cost, spec.total_chips, device_limit)
@@ -178,20 +179,31 @@ def simulate(hlo_text: str = None, cost: HloCost = None,
 
 
 def what_if_straggler(cost: HloCost, spec: SystemSpec, device: int = 0,
-                      slow_factor: float = 2.0,
-                      device_limit: int = 32) -> typing.Tuple[SimReport, SimReport]:
-    """Paper-style what-if: one chip at `slow_factor`x — whole-system cost."""
-    base = simulate(cost=cost, spec=spec, device_limit=device_limit)
+                      slow_factor: float = 2.0, device_limit: int = 32,
+                      scheduler: str = None, executor: str = None,
+                      fabric: str = None,
+                      max_workers: int = 4) -> typing.Tuple[SimReport, SimReport]:
+    """Paper-style what-if: one chip at `slow_factor`x — whole-system cost.
+    Scheduler/executor/fabric pass straight through to :func:`simulate`
+    (the what-if answer is bit-identical under all of them)."""
+    base = simulate(cost=cost, spec=spec, device_limit=device_limit,
+                    scheduler=scheduler, executor=executor, fabric=fabric,
+                    max_workers=max_workers)
     slow = simulate(cost=cost, spec=spec, device_limit=device_limit,
+                    scheduler=scheduler, executor=executor, fabric=fabric,
+                    max_workers=max_workers,
                     faults={f"chip{device}.core": [(0.0, "slow", slow_factor)]})
     return base, slow
 
 
 def what_if_failure(cost: HloCost, spec: SystemSpec, device: int = 0,
                     fail_at_s: float = 0.0, deadline_s: float = 0.5,
-                    device_limit: int = 32) -> SimReport:
+                    device_limit: int = 32, scheduler: str = None,
+                    executor: str = None, fabric: str = None,
+                    max_workers: int = 4) -> SimReport:
     """Kill one chip; collectives time out via the coordinator deadline —
     the failure-detection signal the fault-tolerant trainer reacts to."""
     return simulate(cost=cost, spec=spec, device_limit=device_limit,
-                    deadline_s=deadline_s,
+                    deadline_s=deadline_s, scheduler=scheduler,
+                    executor=executor, fabric=fabric, max_workers=max_workers,
                     faults={f"chip{device}.prog": [(fail_at_s, "fail", None)]})

@@ -102,9 +102,16 @@ class CollectiveCoordinator(Component):
     after one closed-form delay, the ``event`` backend after its per-hop
     transfer events drain (see ``repro.fabric``).
 
-    ``deadline_s``: if a group does not fully join within the deadline of
-    the first join, members that did join receive ``collective_timeout``
-    (failure-detection substrate for the fault-tolerance studies).
+    ``deadline_s``: if a group's collective has not *completed* within the
+    deadline of the first join -- a member never joined (chip death) or
+    the fabric transfer stalled (link fault) -- members that did join
+    receive ``collective_timeout`` (failure-detection substrate for the
+    fault-tolerance studies).  ``collective_done``/``collective_timeout``
+    carry the collective key as payload so callers that interleave
+    iterations (the serving programs) can discard stale notifications; a
+    wired ``health`` port additionally receives a ``timeout_report`` with
+    the joined-member roster, which is what a failure detector needs to
+    tell "who is missing" from "the transfer died".
     """
 
     def __init__(self, name: str, deadline_s: float = None) -> None:
@@ -123,13 +130,19 @@ class CollectiveCoordinator(Component):
                 self._complete(req.payload)
         elif event.kind == "deadline":
             key = event.payload
-            members = self.pending.get(key)
-            if members is not None and len(members) < len(key[2]):
-                self.timed_out.append(key)
-                for _, prog in self.pending.pop(key):
-                    self.port("coll").send(Request(
-                        src=self.port("coll"), dst=prog,
-                        kind="collective_timeout"))
+            members = self.pending.pop(key, None)
+            if members is None:
+                return                # completed within the deadline
+            self.timed_out.append(key)
+            for _, prog in members:
+                self.port("coll").send(Request(
+                    src=self.port("coll"), dst=prog,
+                    kind="collective_timeout", payload=key))
+            health = self.ports.get("health")
+            if health is not None and health.connection is not None:
+                health.send(Request(
+                    src=health, dst=None, kind="timeout_report",
+                    payload=(key, tuple(d for d, _ in members))))
 
     def _join(self, req: Request) -> None:
         name, occ, kind, nbytes, group, device, prog = req.payload
@@ -145,11 +158,14 @@ class CollectiveCoordinator(Component):
                 payload=(key, kind, nbytes, list(group))))
 
     def _complete(self, key) -> None:
-        members = self.pending.pop(key, [])
+        members = self.pending.pop(key, None)
+        if members is None:
+            return                    # timed out before the fabric finished
         self.completed += 1
         for _, prog in members:
             self.port("coll").send(Request(
-                src=self.port("coll"), dst=prog, kind="collective_done"))
+                src=self.port("coll"), dst=prog, kind="collective_done",
+                payload=key))
 
 
 class StarConnection(Connection):

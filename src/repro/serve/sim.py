@@ -152,15 +152,47 @@ class ServingScenario:
     tenants: typing.Tuple[TenantSpec, ...]
 
 
+@dataclasses.dataclass(frozen=True)
+class RecoveryPolicy:
+    """Failure-detection and recovery knobs for :func:`run_serving`.
+
+    * ``max_retries`` -- recovery requeues a request may survive before
+      it is dropped (SLO miss);
+    * ``backoff_base_s`` -- requeue delay after an abort, doubled per
+      retry (exponential backoff gives the detector time to fence the
+      dead chip before the retry lands on it again);
+    * ``heartbeat_s`` -- HealthMonitor probe period (0 disables the
+      heartbeat loop; detection then rides collective timeouts alone,
+      so a tenant with no collectives in flight has no detector);
+    * ``probe_timeout_s`` -- how long a suspect has to answer a
+      targeted probe before it is declared dead (must exceed one
+      control-star round trip);
+    * ``suspect_threshold`` -- collective-timeout strikes that condemn a
+      chip even though it still answers probes (a wedged-but-pingable
+      chip: compute hangs, control plane lives).
+    """
+    max_retries: int = 3
+    backoff_base_s: float = 3e-4
+    heartbeat_s: float = 5e-4
+    probe_timeout_s: float = 1e-4
+    suspect_threshold: int = 3
+
+
 class ServeSizing:
     """Deterministic op sizing for one tenant.  Flops/bytes are roofline
     inputs for :class:`TensorCore`; collective payloads are exact ints so
     the byte counts noted to the fabric up front match the issued joins
-    bit-for-bit (the event fabric's planned-edge guard requires it)."""
+    bit-for-bit (the event fabric's planned-edge guard requires it).
 
-    def __init__(self, tenant: TenantSpec) -> None:
+    ``tp`` overrides the tensor-parallel degree (default: the tenant's
+    full device count) -- a re-meshed degraded group serves with ``tp``
+    equal to the surviving member count, so per-chip flops/bytes grow
+    while the collective payloads (activation rows, tp-independent) stay
+    bit-equal to the plans noted up front."""
+
+    def __init__(self, tenant: TenantSpec, tp: int = None) -> None:
         m = tenant.model
-        self.tp = max(1, len(tenant.devices))
+        self.tp = max(1, len(tenant.devices) if tp is None else tp)
         d_ff = m.d_ff if m.d_ff else 4 * m.d_model
         layers = max(1, m.num_layers)
         self.params = (layers * (4 * m.d_model * m.d_model
@@ -247,12 +279,30 @@ class SlotLedger:
         bisect.insort(self.free, slot)
         return slot
 
+    def evict(self, uid: int) -> int:
+        """Reclaim a seat *without* retiring the uid: the request's KV
+        state is lost (its mesh died mid-iteration) but the request is
+        not done -- unlike :meth:`release` it may be admitted again
+        later (the recovery requeue path)."""
+        if uid in self.completed:
+            raise ValueError(f"uid {uid} already completed")
+        slot = self.seated.pop(uid, None)
+        if slot is None:
+            raise ValueError(f"uid {uid} not seated")
+        del self.active[slot]
+        bisect.insort(self.free, slot)
+        return slot
+
 
 class _ReqLog:
     """Mutable per-request timing record (all integer picoseconds, so
-    queue + prefill + decode == end-to-end exactly, no float residue)."""
+    queue + prefill + decode == end-to-end exactly, no float residue).
+    ``retries`` counts recovery requeues (its work restarted from
+    scratch -- KV is lost with the mesh); ``dropped_ps`` stamps the SLO
+    drop when ``max_retries`` is exceeded."""
     __slots__ = ("uid", "arrival_ps", "prompt_len", "decode_len",
-                 "admit_ps", "first_ps", "done_ps", "remaining")
+                 "admit_ps", "first_ps", "done_ps", "remaining",
+                 "retries", "dropped_ps")
 
     def __init__(self, req: ServeRequest) -> None:
         self.uid = req.uid
@@ -263,6 +313,8 @@ class _ReqLog:
         self.first_ps = None
         self.done_ps = None
         self.remaining = req.decode_len
+        self.retries = 0
+        self.dropped_ps = None
 
     def __getstate__(self):
         return {s: getattr(self, s) for s in self.__slots__}
@@ -288,7 +340,8 @@ class ServeProgram(Component):
                  group: typing.Tuple[int, ...]) -> None:
         super().__init__(name)
         self.device = device
-        self.group = tuple(group)
+        self.group = tuple(group)      # current serving mesh (re-formed
+                                       # by each phase under recovery)
         self.ops: tuple = ()
         self.pc = 0
         self.iter_id = -1
@@ -299,23 +352,77 @@ class ServeProgram(Component):
 
     def handle(self, event: Event) -> None:
         if event.kind == "hello":
-            # Register with the tenant server (spoke->hub auto-routes);
-            # the reference rides the payload like coordinator joins do,
-            # surviving the procs executor as a rank.
-            self.port("ctrl").send(Request(
-                src=self.port("ctrl"), dst=None, kind="register",
-                payload=(self.device, self)))
+            self._register()
+            return
+        if event.kind == "fault_wake":
+            # The FaultInjector's scheduled wake.  A "fail" froze this
+            # program before handle ran; reaching here means the action
+            # just applied was a recover -- drop any pre-failure phase
+            # state and announce ourselves again (rolling-restart
+            # rejoin: the server re-admits the device into its mesh).
+            self.ops = ()
+            self.pc = 0
+            self._register()
             return
         if event.kind != "request":
             return
         req = event.payload
         if req.kind == "phase":
-            self.iter_id, self.ops = req.payload
+            self.iter_id, self.ops, self.group = req.payload
             self.pc = 0
             self._issue()
-        elif req.kind in ("compute_done", "collective_done"):
+        elif req.kind == "compute_done":
+            if req.payload != (self.iter_id, self.pc):
+                return      # job from an aborted iteration; core time
+                            # was burned but the phase moved on
             self.pc += 1
             self._issue()
+        elif req.kind == "collective_done":
+            if not self._expects_coll(req.payload):
+                return      # completion of a pre-abort collective
+            self.pc += 1
+            self._issue()
+        elif req.kind == "collective_timeout":
+            if not self._expects_coll(req.payload):
+                return      # a pre-abort collective timing out late
+            self.ops = ()
+            self.pc = 0
+            self.port("ctrl").send(Request(
+                src=self.port("ctrl"), dst=None, kind="phase_failed",
+                payload=self.iter_id))
+        elif req.kind == "ping":
+            # Heartbeat probe: answer immediately.  A failed program
+            # never reaches here -- the engine drops its events -- so a
+            # missing pong is exactly the liveness signal.
+            health = self.ports.get("health")
+            if health is not None and health.connection is not None:
+                health.send(Request(
+                    src=health, dst=None, kind="pong",
+                    payload=(self.device, req.payload)))
+
+    def _register(self) -> None:
+        # Register with the tenant server (spoke->hub auto-routes); the
+        # reference rides the payload like coordinator joins do,
+        # surviving the procs executor as a rank.  With a HealthMonitor
+        # wired, also enlist with the failure detector.
+        self.port("ctrl").send(Request(
+            src=self.port("ctrl"), dst=None, kind="register",
+            payload=(self.device, self)))
+        health = self.ports.get("health")
+        if health is not None and health.connection is not None:
+            health.send(Request(
+                src=health, dst=None, kind="register_chip",
+                payload=(self.device, self)))
+
+    def _expects_coll(self, key) -> bool:
+        """Is this coordinator notification for the collective the
+        current op list is waiting on?  Collective names embed the
+        server's monotone iteration id, so any notification for an
+        aborted iteration's ops mismatches."""
+        if self.pc >= len(self.ops):
+            return False
+        op = self.ops[self.pc]
+        return op[0] == "coll" and key is not None and key[0] == op[1]
 
     def _issue(self) -> None:
         if self.pc >= len(self.ops):
@@ -330,7 +437,8 @@ class ServeProgram(Component):
             self.port("core").send(Request(
                 src=self.port("core"), dst=None, kind="job",
                 payload=ComputeJob(flops=flops, hbm_bytes=hbm_bytes,
-                                   tag=tag, reply_to=self)))
+                                   tag=tag, reply_to=self,
+                                   token=(self.iter_id, self.pc))))
         else:  # ("coll", name, kind, nbytes)
             _, name, kind, nbytes = op
             self.port("coll").send(Request(
@@ -340,6 +448,154 @@ class ServeProgram(Component):
                          self.device, self)))
 
 
+class HealthMonitor(Component):
+    """Failure detector for the serving pod, fed by two signals:
+
+    * **collective timeouts** from the coordinator (``timeout_report``
+      carries the key and the joined roster): members missing from a
+      timed-out group are *suspects* -- each gets a strike plus a
+      targeted probe, and dies on a missed probe or on reaching
+      ``suspect_threshold`` strikes (a chip whose control plane answers
+      while its compute is wedged);
+    * optional **heartbeats**: every ``heartbeat_s`` the monitor judges
+      the previous round's pongs (a silent chip is declared dead) and
+      pings the live, un-quiesced ones -- this catches deaths that no
+      collective would ever surface (single-chip tenants, idle meshes).
+
+    Verdicts go to the owning :class:`TenantServer` as ``chip_dead``
+    requests (or ``coll_failed`` when a fully-joined collective died in
+    the fabric -- nobody to fence, the server just retries).  Everything
+    is ordinary events on a control star, so detection latency is
+    simulated and the whole protocol stays bit-identical across
+    schedulers and executors.  Servers send ``quiesce`` once their trace
+    is fully resolved; the probe loop stops when no live, un-quiesced
+    chip remains, bounding the event horizon."""
+
+    def __init__(self, name: str,
+                 tenants: typing.Tuple[typing.Tuple[int, typing.Tuple[int, ...]], ...],
+                 policy: RecoveryPolicy) -> None:
+        super().__init__(name)
+        self.policy = policy
+        self.tenant_of = {d: tid for tid, devs in tenants for d in devs}
+        self.expect_chips = sum(len(devs) for _, devs in tenants)
+        self.expect_servers = len(tenants)
+        self.chips: typing.Dict[int, object] = {}      # device -> program
+        self.servers: typing.Dict[int, object] = {}    # tenant id -> server
+        self.dead: set = set()
+        self.deaths = 0                                # monotone (rejoins
+                                                       # shrink ``dead``)
+        self.strikes: typing.Dict[int, int] = {}
+        self.last_ack: typing.Dict[int, int] = {}      # device -> probe seq
+        self.seq = 0
+        self.quiesced: set = set()                     # tenant ids drained
+        self._probing = False
+
+    def handle(self, event: Event) -> None:
+        if event.kind == "probe":
+            self._probe()
+        elif event.kind == "verdict":
+            device, seq = event.payload
+            if device not in self.dead and self.last_ack.get(device, -1) < seq:
+                self._declare_dead(device)   # targeted probe unanswered
+        elif event.kind == "request":
+            req = event.payload
+            if req.kind == "register_chip":
+                device, prog = req.payload
+                self.chips[device] = prog
+                self.dead.discard(device)    # rolling-restart rejoin
+                self.strikes.pop(device, None)
+                self.last_ack[device] = self.seq   # fresh: skip this round
+                self._maybe_start()
+            elif req.kind == "register_server":
+                tid, server = req.payload
+                self.servers[tid] = server
+                self._maybe_start()
+            elif req.kind == "pong":
+                device, seq = req.payload
+                if self.last_ack.get(device, -1) < seq:
+                    self.last_ack[device] = seq
+            elif req.kind == "timeout_report":
+                key, joined = req.payload
+                self._on_timeout(key, joined)
+            elif req.kind == "quiesce":
+                self.quiesced.add(req.payload)
+
+    # -- heartbeat loop ----------------------------------------------------
+    def _maybe_start(self) -> None:
+        if (self._probing or not self.policy.heartbeat_s
+                or len(self.chips) < self.expect_chips
+                or len(self.servers) < self.expect_servers):
+            return
+        self._probing = True
+        self.schedule("probe", s_to_ps(self.policy.heartbeat_s))
+
+    def _live_targets(self) -> list:
+        return [d for d in sorted(self.chips)
+                if d not in self.dead
+                and self.tenant_of[d] not in self.quiesced]
+
+    def _probe(self) -> None:
+        targets = self._live_targets()
+        if not targets:
+            # every tenant drained (or fully dead): stop the loop.  A
+            # later register_chip restarts it via _maybe_start.
+            self._probing = False
+            return
+        for device in targets:             # judge the previous round
+            if self.last_ack.get(device, -1) < self.seq:
+                self._declare_dead(device)
+        self.seq += 1
+        for device in self._live_targets():
+            hub = self.port("hub")
+            hub.send(Request(src=hub, dst=self.chips[device], kind="ping",
+                             payload=self.seq))
+        self.schedule("probe", s_to_ps(self.policy.heartbeat_s))
+
+    # -- collective-timeout path -------------------------------------------
+    def _on_timeout(self, key, joined) -> None:
+        group = key[2]
+        joined_set = set(joined)
+        suspects = [d for d in group
+                    if d not in joined_set and d not in self.dead]
+        if not suspects:
+            # Fully joined but the transfer never completed: a fabric
+            # stall, not a chip death.  Nobody to fence; the owning
+            # server aborts and retries through backoff.
+            tid = self.tenant_of.get(group[0])
+            server = self.servers.get(tid)
+            if server is not None:
+                hub = self.port("hub")
+                hub.send(Request(src=hub, dst=server, kind="coll_failed",
+                                 payload=key))
+            return
+        for device in suspects:
+            strikes = self.strikes.get(device, 0) + 1
+            self.strikes[device] = strikes
+            if strikes >= self.policy.suspect_threshold:
+                self._declare_dead(device)
+            else:
+                # Guilty unless it answers a targeted probe in time.
+                self.seq += 1
+                hub = self.port("hub")
+                hub.send(Request(src=hub, dst=self.chips[device],
+                                 kind="ping", payload=self.seq))
+                self.schedule("verdict",
+                              s_to_ps(self.policy.probe_timeout_s),
+                              payload=(device, self.seq))
+
+    def _declare_dead(self, device: int) -> None:
+        if device in self.dead:
+            return
+        self.dead.add(device)
+        self.deaths += 1
+        self.strikes.pop(device, None)
+        server = self.servers.get(self.tenant_of.get(device))
+        if server is not None:
+            hub = self.port("hub")
+            hub.send(Request(src=hub, dst=server, kind="chip_dead",
+                             payload=device))
+
+
 class TenantServer(Component):
     """Per-tenant continuous-batching scheduler (the Orca loop as
     simulator events).  Each iteration: admit queued requests into free
@@ -347,12 +603,28 @@ class TenantServer(Component):
     its collectives) to every member chip, wait for all phase_done
     replies, then retire finished requests and start the next iteration.
     Open loop: arrivals are pre-scheduled self-events from the trace and
-    never wait on completions."""
+    never wait on completions.
 
-    def __init__(self, name: str, tenant: TenantSpec) -> None:
+    With a :class:`RecoveryPolicy` the server also *serves through*
+    faults: a ``chip_dead`` verdict (or a ``phase_failed`` from its own
+    chips) aborts the in-flight iteration, evicts every seated request
+    (their KV shards died with the mesh), requeues each with exponential
+    backoff -- or drops it past ``max_retries`` -- and re-forms the
+    serving group from the surviving members (elastic re-mesh: the next
+    phase simply names the smaller group and re-sized per-chip ops).  A
+    dead device registering again rejoins the mesh; seated requests are
+    resharded (evicted + immediately requeued, no retry penalty) before
+    the first iteration on the grown group."""
+
+    def __init__(self, name: str, tenant: TenantSpec, tid: int = 0,
+                 policy: RecoveryPolicy = None) -> None:
         super().__init__(name)
         self.tenant = tenant
+        self.tid = tid
+        self.policy = policy
         self.sizing = ServeSizing(tenant)
+        self._sizings: typing.Dict[int, ServeSizing] = {
+            len(tenant.devices): self.sizing}
         self.ledger = SlotLedger(tenant.slots)
         self.members: typing.Dict[int, object] = {}    # device -> program
         self.queue: typing.List[int] = []              # waiting uids (FIFO)
@@ -363,32 +635,143 @@ class TenantServer(Component):
         self.iterations = 0
         self._phase_replies = 0
         self._newly: typing.List[int] = []
+        # -- recovery state -------------------------------------------------
+        self.dead: set = set()               # fenced devices
+        self.retries = 0                     # recovery requeues issued
+        self.drops: typing.List[int] = []    # uids dropped past max_retries
+        self.recoveries = 0                  # outage windows closed
+        self.rejoins = 0                     # dead devices re-registered
+        self.outages: typing.List[typing.Tuple[int, int]] = []
+        self._outage_start: typing.Optional[int] = None
+        self._serving_group: tuple = ()      # mesh the seated KV lives on
+        self._resolved = 0                   # done + dropped requests
+        self._quiesced = False
 
     def start(self) -> None:
         for r in self.tenant.requests:
             self.schedule("arrival", r.arrival_ps, payload=r.uid)
+        health = self.ports.get("health")
+        if health is not None and health.connection is not None:
+            health.send(Request(
+                src=health, dst=None, kind="register_server",
+                payload=(self.tid, self)))
+        self._maybe_quiesce()   # a tenant with an empty trace is done
 
     def handle(self, event: Event) -> None:
         if event.kind == "arrival":
             self.queue.append(event.payload)
             self._maybe_iterate()
+        elif event.kind == "requeue":
+            uid = event.payload
+            rec = self.recs[uid]
+            if (rec.done_ps is None and rec.dropped_ps is None
+                    and uid not in self.ledger.seated):
+                self.queue.append(uid)
+            self._maybe_iterate()
         elif event.kind == "request":
             req = event.payload
             if req.kind == "register":
                 device, prog = req.payload
+                if device in self.dead:          # rolling-restart rejoin
+                    self.dead.discard(device)
+                    self.rejoins += 1
                 self.members[device] = prog
                 self._maybe_iterate()
             elif req.kind == "phase_done":
+                if req.payload != self.iter_id or not self._phase_replies:
+                    return                       # reply from an aborted phase
                 self._phase_replies -= 1
                 if self._phase_replies == 0:
                     self._finish_iteration()
+            elif req.kind == "phase_failed":
+                if (self.policy is None or req.payload != self.iter_id
+                        or not self._phase_replies):
+                    return
+                self._abort_iteration()
+            elif req.kind == "coll_failed":
+                # fully-joined collective died in the fabric: retry
+                if self.policy is not None and self._phase_replies:
+                    self._abort_iteration()
+            elif req.kind == "chip_dead":
+                self._on_chip_dead(req.payload)
+
+    # -- recovery ----------------------------------------------------------
+    def _on_chip_dead(self, device: int) -> None:
+        if self.policy is None or device in self.dead:
+            return
+        self.dead.add(device)
+        self.members.pop(device, None)
+        if self._phase_replies or self.ledger.in_use:
+            # in-flight iteration and/or seated KV sharded over a mesh
+            # that just lost a member: abort, reclaim, requeue
+            self._abort_iteration()
+        else:
+            self._maybe_iterate()
+
+    def _abort_iteration(self) -> None:
+        now = self.engine.now
+        if self._outage_start is None:
+            self._outage_start = now
+        self._phase_replies = 0
+        self._newly = []
+        for uid in sorted(self.ledger.seated):
+            self.ledger.evict(uid)
+            rec = self.recs[uid]
+            rec.admit_ps = None
+            rec.first_ps = None
+            rec.remaining = rec.decode_len       # KV lost: restart
+            rec.retries += 1
+            if rec.retries > self.policy.max_retries:
+                rec.dropped_ps = now             # SLO drop
+                self.drops.append(uid)
+                self._resolved += 1
+            else:
+                self.retries += 1
+                delay = s_to_ps(self.policy.backoff_base_s
+                                * (2 ** (rec.retries - 1)))
+                self.schedule("requeue", delay, payload=uid)
+        self._maybe_iterate()
+        self._maybe_quiesce()
+
+    def _reshard(self, group: tuple) -> None:
+        """Membership changed under seated requests (a rejoin): their KV
+        shards live on the old mesh, so evict and requeue them ahead of
+        the FIFO queue -- no retry penalty, the reshard is planned."""
+        front = []
+        for uid in sorted(self.ledger.seated):
+            self.ledger.evict(uid)
+            rec = self.recs[uid]
+            rec.admit_ps = None
+            rec.first_ps = None
+            rec.remaining = rec.decode_len
+            front.append(uid)
+        self.queue[:0] = front
+
+    def _maybe_quiesce(self) -> None:
+        if self._quiesced or self._resolved < len(self.recs):
+            return
+        health = self.ports.get("health")
+        if health is not None and health.connection is not None:
+            self._quiesced = True
+            health.send(Request(
+                src=health, dst=None, kind="quiesce", payload=self.tid))
+
+    def _sizing_for(self, n: int) -> ServeSizing:
+        s = self._sizings.get(n)
+        if s is None:
+            s = self._sizings[n] = ServeSizing(self.tenant, tp=n)
+        return s
 
     # -- the Orca iteration ------------------------------------------------
     def _maybe_iterate(self) -> None:
         if self._phase_replies:                  # iteration in flight
             return
-        if len(self.members) < len(self.tenant.devices):
-            return                               # chips still registering
+        expected = len(self.tenant.devices) - len(self.dead)
+        if len(self.members) < expected or not self.members:
+            return              # chips still registering, or all fenced
+        group = tuple(sorted(self.members))
+        if self.ledger.in_use and group != self._serving_group:
+            self._reshard(group)
         admitted = []
         while self.queue and self.ledger.has_free():
             uid = self.queue.pop(0)
@@ -396,20 +779,21 @@ class TenantServer(Component):
             rec = self.recs[uid]
             rec.admit_ps = self.engine.now
             admitted.append(uid)
+        self._serving_group = group
         if not self.ledger.in_use:
             return                               # idle until next arrival
         self.iter_id += 1
         self.iterations += 1
         self._newly = admitted
-        ops = self._build_ops(admitted)
-        self._phase_replies = len(self.members)
-        for d in sorted(self.members):
+        ops = self._build_ops(admitted, group)
+        self._phase_replies = len(group)
+        for d in group:
             self.port("ctrl").send(Request(
                 src=self.port("ctrl"), dst=self.members[d], kind="phase",
-                payload=(self.iter_id, ops)))
+                payload=(self.iter_id, ops, group)))
 
-    def _build_ops(self, admitted: typing.List[int]) -> tuple:
-        s = self.sizing
+    def _build_ops(self, admitted: typing.List[int], group: tuple) -> tuple:
+        s = self._sizing_for(len(group))
         it = self.iter_id
         ops = []
         for uid in admitted:
@@ -420,7 +804,7 @@ class TenantServer(Component):
         batch = self.ledger.in_use
         ops.append(("compute", f"{self.name}.i{it}.decode",
                     s.decode_flops(batch), s.decode_hbm(batch)))
-        if len(self.tenant.devices) > 1:
+        if len(group) > 1:
             for k in range(s.coll_ops):
                 ops.append(("coll", f"{self.name}.i{it}.ar{k}",
                             "all-reduce", s.ar_bytes(batch)))
@@ -444,7 +828,15 @@ class TenantServer(Component):
                 rec.done_ps = now
                 self.ledger.release(uid)
                 self.completed_order.append(uid)
+                self._resolved += 1
+        if self._outage_start is not None:
+            # a completed iteration on the re-formed mesh closes the
+            # outage window -- the tenant is serving again
+            self.outages.append((self._outage_start, now))
+            self._outage_start = None
+            self.recoveries += 1
         self._maybe_iterate()
+        self._maybe_quiesce()
 
 
 # ---------------------------------------------------------------------------
@@ -461,7 +853,8 @@ class ServingSystem:
 
     def __init__(self, scenario: ServingScenario, spec: SystemSpec,
                  scheduler=None, max_workers: int = 4, fabric=None,
-                 executor=None) -> None:
+                 executor=None, deadline_s: float = None,
+                 recovery: RecoveryPolicy = None) -> None:
         from ..fabric import make_fabric   # late: fabric imports core modules
         seen: set = set()
         for t in scenario.tenants:
@@ -479,25 +872,43 @@ class ServingSystem:
                 seen.add(d)
         self.scenario = scenario
         self.spec = spec
+        self.policy = recovery
         self.engine = Engine(scheduler=scheduler, max_workers=max_workers,
                              executor=executor)
         self.fabric = make_fabric(fabric or spec.fabric, spec)
         self.coordinator = self.engine.register(
-            CollectiveCoordinator("coordinator"))
+            CollectiveCoordinator("coordinator", deadline_s=deadline_s))
         self.fabric.install(self.engine, self.coordinator)
         coll_conn = self.engine.register(
             StarConnection("coll_fabric", self.coordinator.port("coll"),
                            latency_s=spec.ctrl_latency_s))
+        self.monitor: typing.Optional[HealthMonitor] = None
+        health_conn = None
+        if recovery is not None:
+            # Failure detector on its own control star; the coordinator
+            # reports collective timeouts into it (key + joined roster).
+            self.monitor = self.engine.register(HealthMonitor(
+                "health.monitor",
+                tenants=tuple((tid, t.devices)
+                              for tid, t in enumerate(scenario.tenants)),
+                policy=recovery))
+            health_conn = self.engine.register(
+                StarConnection("health.star", self.monitor.port("hub"),
+                               latency_s=spec.ctrl_latency_s))
+            health_conn.plug(self.coordinator.port("health"))
         self.servers: typing.List[TenantServer] = []
         self.programs: typing.List[ServeProgram] = []
         self.cores: typing.List[TensorCore] = []
         self.hbms: typing.List[HbmController] = []
         for tid, tenant in enumerate(scenario.tenants):
             server = self.engine.register(
-                TenantServer(f"tenant{tid}.server", tenant))
+                TenantServer(f"tenant{tid}.server", tenant, tid=tid,
+                             policy=recovery))
             ctrl = self.engine.register(
                 StarConnection(f"tenant{tid}.ctrl", server.port("ctrl"),
                                latency_s=spec.ctrl_latency_s))
+            if health_conn is not None:
+                health_conn.plug(server.port("health"))
             for d in tenant.devices:
                 core = self.engine.register(
                     TensorCore(f"chip{d}.core", spec.chip))
@@ -511,6 +922,8 @@ class ServingSystem:
                     core.port("hbm")).plug(hbm.port("cpu"))
                 coll_conn.plug(prog.port("coll"))
                 ctrl.plug(prog.port("ctrl"))
+                if health_conn is not None:
+                    health_conn.plug(prog.port("health"))
                 self.programs.append(prog)
                 self.cores.append(core)
                 self.hbms.append(hbm)
@@ -528,6 +941,33 @@ class ServingSystem:
                         self.fabric.note_plan("all-to-all",
                                               float(s.a2a_bytes(b)),
                                               tuple(tenant.devices))
+
+    def note_failover_plans(self, candidates: typing.Iterable[int]) -> None:
+        """Note the collective plans of every *degraded* group a recovery
+        could re-mesh to: for each tenant, its device group minus every
+        non-empty subset of ``candidates`` (the chips the fault plan can
+        kill).  Plans are consumed at run start -- the bounded scheduler
+        derives its strict-window edges from them -- so every group that
+        might form mid-run must be noted before ``engine.run()``.
+        Collective payloads are activation rows (tp-independent), so the
+        noted bytes match the degraded iterations bit-for-bit."""
+        import itertools
+        for tenant in self.scenario.tenants:
+            cand = sorted(set(tenant.devices) & set(candidates))
+            for r in range(1, len(cand) + 1):
+                for gone in itertools.combinations(cand, r):
+                    group = tuple(d for d in tenant.devices
+                                  if d not in gone)
+                    if len(group) < 2:
+                        continue
+                    s = ServeSizing(tenant, tp=len(group))
+                    for b in range(1, tenant.slots + 1):
+                        self.fabric.note_plan("all-reduce",
+                                              float(s.ar_bytes(b)), group)
+                        if s.moe:
+                            self.fabric.note_plan("all-to-all",
+                                                  float(s.a2a_bytes(b)),
+                                                  group)
 
     def run(self, until_s: float = None) -> int:
         for prog in self.programs:
@@ -584,6 +1024,21 @@ class ServeReport:
     tenant_p50_s: typing.List[float] = dataclasses.field(default_factory=list)
     tenant_p99_s: typing.List[float] = dataclasses.field(default_factory=list)
     per_request: list = dataclasses.field(default_factory=list)
+    # -- graceful degradation (recovery layer; zeros without a policy) ----
+    collective_timeouts: int = 0
+    retries: int = 0               # recovery requeues across tenants
+    dropped: int = 0               # requests dropped past max_retries
+    recoveries: int = 0            # outage windows closed by a completion
+    rejoins: int = 0               # dead chips that re-registered
+    chip_deaths: int = 0           # HealthMonitor verdicts (monotone)
+    tenant_outage_s: typing.List[float] = dataclasses.field(
+        default_factory=list)
+    tenant_availability: typing.List[float] = dataclasses.field(
+        default_factory=list)
+    outage_windows: typing.List[list] = dataclasses.field(
+        default_factory=list)     # per tenant: [start_s, end_s] pairs
+    goodput_in_outage_rps: float = 0.0    # completions per tenant-second
+    goodput_outside_outage_rps: float = 0.0
     scheduler: str = "serial"
     executor: str = "none"
 
@@ -594,18 +1049,58 @@ class ServeReport:
                 if k not in self._EXECUTION_FIELDS}
 
 
+def resolve_recovery(recovery, deadline_s: float = None):
+    """Resolve the ``recovery`` argument of :func:`run_serving`:
+    ``None`` enables a default :class:`RecoveryPolicy` iff ``deadline_s``
+    is set (detection without recovery must be asked for explicitly with
+    ``recovery=False``); ``True`` enables defaults; ``False`` disables;
+    a :class:`RecoveryPolicy` instance is used as-is."""
+    if recovery is False:
+        return None
+    if recovery is True:
+        return RecoveryPolicy()
+    if recovery is None:
+        return RecoveryPolicy() if deadline_s else None
+    return recovery
+
+
+def _fault_candidates(faults: dict) -> set:
+    """Chip indices a fault plan can plausibly remove from a mesh (any
+    chipN.* target -- even a straggler can be fenced by strike count)."""
+    out = set()
+    for name in faults or ():
+        if name.startswith("chip"):
+            head = name[4:].split(".", 1)[0]
+            if head.isdigit():
+                out.add(int(head))
+    return out
+
+
 def run_serving(scenario: ServingScenario, spec: SystemSpec = None,
                 scheduler: str = None, max_workers: int = 4,
                 fabric: str = None, executor: str = None,
-                faults: dict = None, until_s: float = None) -> ServeReport:
+                faults: dict = None, until_s: float = None,
+                deadline_s: float = None,
+                recovery=None) -> ServeReport:
     """Run one open-loop serving scenario and report the latency curve
     inputs.  Mirrors :func:`repro.core.simulate.simulate`'s fault-plan
     handling: same grammar, same validation, ``fabric.*`` targets need
-    the event fabric."""
+    the event fabric.
+
+    ``deadline_s`` threads through to the shared
+    :class:`~repro.core.system.CollectiveCoordinator`: a collective that
+    has not completed within the deadline of its first join times out
+    (the failure-detection signal).  ``recovery`` selects the policy
+    (see :func:`resolve_recovery`); with one, a :class:`HealthMonitor`
+    turns timeouts + heartbeats into ``chip_dead`` verdicts and tenants
+    serve *through* the fault (see docs/faults.md, Detection & recovery).
+    """
     spec = spec or SystemSpec()
+    policy = resolve_recovery(recovery, deadline_s)
     system = ServingSystem(scenario, spec, scheduler=scheduler,
                            max_workers=max_workers, fabric=fabric,
-                           executor=executor)
+                           executor=executor, deadline_s=deadline_s,
+                           recovery=policy)
     metrics = MetricsHook()
     system.engine.accept_hook(metrics)   # engine-level only (no fusing)
     if faults:
@@ -626,6 +1121,9 @@ def run_serving(scenario: ServingScenario, spec: SystemSpec = None,
         inj = FaultInjector(plan)
         for comp in targets:
             comp.accept_hook(inj)
+        inj.arm(targets)   # actions apply on schedule even on idle targets
+        if policy is not None:
+            system.note_failover_plans(_fault_candidates(faults))
 
     end_ps = system.run(until_s=until_s)
     time_s = ps_to_s(end_ps)
@@ -633,11 +1131,14 @@ def run_serving(scenario: ServingScenario, spec: SystemSpec = None,
     per_request = []
     e2e, queue_t, prefill_t, decode_t = [], [], [], []
     tenant_e2e: typing.List[list] = [[] for _ in system.servers]
-    offered = completed = in_flight = queued = 0
+    offered = completed = in_flight = queued = dropped = 0
     for tid, server in enumerate(system.servers):
         for uid in sorted(server.recs):
             rec = server.recs[uid]
             offered += 1
+            if rec.dropped_ps is not None:
+                dropped += 1
+                continue
             if rec.done_ps is None:
                 if rec.admit_ps is None:
                     queued += 1
@@ -666,6 +1167,39 @@ def run_serving(scenario: ServingScenario, spec: SystemSpec = None,
     busy = max((metrics.busy_ps[c.name] for c in system.cores), default=0)
     span_s = max((float(r.arrival_ps) for t in scenario.tenants
                   for r in t.requests), default=0.0) / 1e12
+
+    # Availability accounting: an outage window opens at an abort and
+    # closes at the next completed iteration (still open at the end of
+    # serving counts in full).  The serving span is per tenant, last
+    # request stamp (done / dropped / arrival) -- trailing deadline
+    # no-op events must not dilute availability.
+    tenant_outage_s, tenant_avail, outage_windows = [], [], []
+    in_out_done = out_done = 0
+    in_out_span_ps = out_span_ps = 0
+    for server in system.servers:
+        span_ps = max((max(rec.done_ps or 0, rec.dropped_ps or 0,
+                           rec.arrival_ps)
+                       for rec in server.recs.values()), default=0)
+        windows = list(server.outages)
+        if server._outage_start is not None:
+            windows.append((server._outage_start, max(span_ps,
+                                                      server._outage_start)))
+        outage_ps = sum(e - s for s, e in windows)
+        tenant_outage_s.append(ps_to_s(outage_ps))
+        tenant_avail.append(1.0 - outage_ps / span_ps if span_ps else 1.0)
+        outage_windows.append([[ps_to_s(s), ps_to_s(e)] for s, e in windows])
+        in_out_span_ps += outage_ps
+        out_span_ps += span_ps - outage_ps
+        for rec in server.recs.values():
+            if rec.done_ps is None:
+                continue
+            # half-open [start, end): the completion that closes an
+            # outage window is the restore moment, counted outside
+            if any(s <= rec.done_ps < e for s, e in windows):
+                in_out_done += 1
+            else:
+                out_done += 1
+
     return ServeReport(
         time_s=time_s,
         events=system.engine.events_processed,
@@ -695,6 +1229,19 @@ def run_serving(scenario: ServingScenario, spec: SystemSpec = None,
         fabric=system.fabric.name,
         link_utilization=system.fabric.link_utilization(end_ps or None),
         per_request=per_request,
+        collective_timeouts=len(system.coordinator.timed_out),
+        retries=sum(s.retries for s in system.servers),
+        dropped=dropped,
+        recoveries=sum(s.recoveries for s in system.servers),
+        rejoins=sum(s.rejoins for s in system.servers),
+        chip_deaths=system.monitor.deaths if system.monitor else 0,
+        tenant_outage_s=tenant_outage_s,
+        tenant_availability=tenant_avail,
+        outage_windows=outage_windows,
+        goodput_in_outage_rps=(in_out_done / ps_to_s(in_out_span_ps)
+                               if in_out_span_ps else 0.0),
+        goodput_outside_outage_rps=(out_done / ps_to_s(out_span_ps)
+                                    if out_span_ps else 0.0),
         scheduler=system.engine.scheduler.name,
         executor=(system.engine.scheduler.executor.name
                   if getattr(system.engine.scheduler, "executor", None)

@@ -394,3 +394,138 @@ def test_sweep_runs_serving_config_with_latency_row():
     assert row["completed"] == row["offered"] > 0
     assert row["goodput_rps"] > 0
     assert "error" not in row
+
+
+# --------------------------------------------------------------------------
+# recovery layer: detection -> abort -> re-mesh -> requeue (docs/faults.md)
+# --------------------------------------------------------------------------
+
+DEADLINE = 5e-4
+KILL = {"chip1.prog": [(3e-3, "fail", None)]}          # tenant 0, mid-trace
+REJOIN = {"chip1.prog": [(2e-3, "fail", None), (4e-3, "recover", None)]}
+
+
+def _rec_oracle(key, **kw):
+    """Serial reference runs for the recovery matrix (cached like
+    _oracle; recovery runs are slower, so one sim per config)."""
+    if key not in _oracles:
+        _oracles[key] = run_serving(_scenario(), spec=SMALL,
+                                    deadline_s=DEADLINE, recovery=True, **kw)
+    return _oracles[key]
+
+
+def test_ledger_evict_reclaims_seat_without_retiring_uid():
+    led = SlotLedger(2)
+    led.admit(7)
+    led.admit(8)
+    assert led.evict(7) == 0
+    assert led.in_use == 1 and 7 not in led.completed
+    assert led.admit(7) == 0                          # re-admit works
+    led.release(7)
+    with pytest.raises(ValueError, match="already completed"):
+        led.evict(7)                                  # done is done
+    with pytest.raises(ValueError, match="not seated"):
+        led.evict(9)
+    assert led.evict(8) == 1 and led.in_use == 0
+
+
+def test_recovery_serves_through_chip_kill():
+    rep = _rec_oracle(("rec", "analytic", "kill"), faults=KILL)
+    assert rep.offered == rep.completed + rep.dropped  # zero stuck
+    assert rep.retries > 0 and rep.recoveries >= 1
+    assert rep.chip_deaths == 1 and rep.collective_timeouts >= 1
+    # availability dips for the tenant that lost a chip, nobody else
+    assert rep.tenant_availability[0] < 1.0
+    assert rep.tenant_availability[1] == 1.0
+    assert rep.tenant_outage_s[0] > 0 and rep.tenant_outage_s[1] == 0
+    assert rep.outage_windows[0] and not rep.outage_windows[1]
+    assert rep.goodput_in_outage_rps < rep.goodput_outside_outage_rps
+
+
+@pytest.mark.parametrize("fabric", ("analytic", "event"))
+@pytest.mark.parametrize("sched,executor", SCHED_X_EXEC)
+def test_recovery_bit_identity_mid_recovery(sched, executor, fabric):
+    """The hard invariant: death + abort + re-mesh + requeue all ride
+    engine events, so every scheduler x executor reproduces the serial
+    oracle bit-for-bit *while* the trace recovers."""
+    oracle = _rec_oracle(("rec", fabric, "kill"), fabric=fabric, faults=KILL)
+    rep = run_serving(_scenario(), spec=SMALL, scheduler=sched,
+                      executor=executor, max_workers=2, fabric=fabric,
+                      deadline_s=DEADLINE, recovery=True, faults=KILL)
+    assert rep.summary() == oracle.summary()
+    assert rep.retries == oracle.retries > 0
+
+
+def test_recovery_cross_fabric_behavioral_identity():
+    """Analytic and event price these small rings identically, so even
+    mid-recovery only the fabric-artifact fields may differ."""
+    a = _rec_oracle(("rec", "analytic", "kill"), faults=KILL).summary()
+    e = _rec_oracle(("rec", "event", "kill"), fabric="event",
+                    faults=KILL).summary()
+    skip = ("events", "fabric", "link_report", "link_utilization")
+    assert {k: v for k, v in a.items() if k not in skip} \
+        == {k: v for k, v in e.items() if k not in skip}
+
+
+def test_rejoin_rolls_the_chip_back_in():
+    rep = run_serving(_scenario(), spec=SMALL, deadline_s=DEADLINE,
+                      recovery=True, faults=REJOIN)
+    assert rep.rejoins == 1 and rep.chip_deaths == 1
+    assert rep.completed == rep.offered                # everything drains
+    assert rep.retries > 0
+    # the rejoin re-mesh itself is loss-free: nothing gets dropped
+    assert rep.dropped == 0
+
+
+def test_transient_link_served_through_with_recovery():
+    """PR 8 left this stalling forever (in_flight + queued > 0); with a
+    deadline + recovery the lost chunks surface as a timeout, the
+    iteration retries, and the trace completes -- no chip is falsely
+    declared dead (the roster was complete; the fabric stalled)."""
+    rep = run_serving(
+        _scenario(), spec=SMALL, fabric="event", deadline_s=DEADLINE,
+        recovery=True,
+        faults={"fabric.pod0.ici[0,1]+x": [(1e-3, "transient", 1e-3)]})
+    assert rep.completed == rep.offered
+    assert rep.retries >= 1 and rep.recoveries >= 1
+    assert rep.chip_deaths == 0
+
+
+def test_deadline_threads_through_run_serving_healthy():
+    """deadline_s alone (recovery=False) must not perturb a healthy run:
+    no timeouts, identical latency behavior (only the engine's internal
+    event count may differ -- deadline events exist now)."""
+    base = _oracle(("analytic", "none"))
+    rep = run_serving(_scenario(), spec=SMALL, deadline_s=DEADLINE,
+                      recovery=False)
+    assert rep.collective_timeouts == 0
+    assert rep.p99_s == base.p99_s and rep.completed == base.completed
+    assert rep.retries == rep.recoveries == rep.chip_deaths == 0
+
+
+def test_detection_only_mode_counts_timeouts_but_stalls():
+    """recovery=False keeps PR 8 semantics under a kill: the signal
+    fires, nobody reacts, the tenant stalls -- the explicit contrast
+    that motivates the recovery layer."""
+    rep = run_serving(_scenario(), spec=SMALL, deadline_s=DEADLINE,
+                      recovery=False, faults=KILL)
+    assert rep.collective_timeouts >= 1
+    assert rep.completed < rep.offered
+    assert rep.retries == 0 and rep.recoveries == 0
+
+
+def test_heartbeat_detects_death_on_collective_free_tenant():
+    """Single-chip tenants never run collectives, so the deadline signal
+    can't fire -- only the heartbeat probe path can declare the death.
+    The dead tenant's unserviceable requests stay queued (there is no
+    surviving chip to re-mesh onto) but the run still terminates."""
+    tiny = SystemSpec(pod_shape=(2, 1))
+    scen = build_scenario(tiny, rate_rps=800.0, duration_s=0.006, seed=3)
+    assert [t.devices for t in scen.tenants] == [(0,), (1,)]
+    rep = run_serving(scen, spec=tiny, deadline_s=DEADLINE, recovery=True,
+                      faults={"chip0.prog": [(2e-3, "fail", None)]})
+    assert rep.chip_deaths == 1 and rep.collective_timeouts == 0
+    assert rep.tenant_availability[0] < 1.0
+    assert rep.tenant_availability[1] == 1.0
+    assert rep.queued > 0                              # dead tenant's tail
+    assert rep.completed + rep.queued == rep.offered

@@ -100,3 +100,65 @@ def test_trace_builder_caps_repeats():
     # total work preserved exactly
     assert sum(op.bytes for op in colls) == pytest.approx(128 * 1e4)
     assert sum(op.flops for op in segs) == pytest.approx(128 * 1e6)
+
+
+# -- what-ifs under every scheduler x executor (satellite of ISSUE 9) ------
+
+_WHATIF_COMBOS = [("serial", None), ("batch", "threads"),
+                  ("batch", "procs"), ("lookahead", "threads"),
+                  ("lookahead", "procs"), ("bounded", "threads"),
+                  ("bounded", "procs")]
+
+
+@pytest.mark.parametrize("sched,executor", _WHATIF_COMBOS)
+def test_what_if_failure_matrix(sched, executor):
+    """what_if_failure now threads scheduler/executor/fabric straight to
+    simulate(); every combination must reproduce the serial answer."""
+    cost = _cost(n_devices=8, layers=4)
+    oracle = what_if_failure(cost, SMALL, device=2, deadline_s=0.001,
+                             device_limit=None)
+    rep = what_if_failure(cost, SMALL, device=2, deadline_s=0.001,
+                          device_limit=None, scheduler=sched,
+                          executor=executor, max_workers=2)
+    assert rep.summary() == oracle.summary()
+    assert rep.collective_timeouts >= 1 and rep.devices_aborted >= 1
+
+
+@pytest.mark.parametrize("sched,executor",
+                         [("batch", "threads"), ("bounded", "procs")])
+def test_what_if_straggler_matrix(sched, executor):
+    cost = _cost(n_devices=8, layers=4)
+    b0, s0 = what_if_straggler(cost, SMALL, device=3, slow_factor=4.0,
+                               device_limit=None)
+    b1, s1 = what_if_straggler(cost, SMALL, device=3, slow_factor=4.0,
+                               device_limit=None, scheduler=sched,
+                               executor=executor, max_workers=2)
+    assert b1.summary() == b0.summary()
+    assert s1.summary() == s0.summary()
+
+
+def test_fault_injector_arms_idle_components():
+    """Regression (ISSUE 9): plan actions used to apply only when the
+    *next* event reached the component, so fail-then-recover on an idle
+    link never recovered (a failed component receives nothing).  arm()
+    posts explicit fault_wake events, so by end of run the idle link has
+    gone through fail AND recover exactly on schedule."""
+    cost = _cost(n_devices=4, layers=2)
+    spec = SystemSpec(pod_shape=(2, 2))
+    # -y on chip (0,0): a link no 4-chip row-ring transfer ever crosses,
+    # so without arm() no event would reach it at all
+    idle_link = "fabric.pod0.ici[0,0]-y"
+    rep = simulate(cost=cost, spec=spec, fabric="event", device_limit=None,
+                   faults={idle_link: [(0.0, "fail", None),
+                                       (1e-6, "recover", None)]})
+    assert rep.devices_done == 4                # run unaffected by the link
+    system = System(spec, fabric="event")
+    names = {c.name for c in system.fabric.fault_targets()}
+    assert idle_link in names                   # the target really exists
+    # and the same plan on a *used* link degrades then heals: the run
+    # still completes (recover landed even though the link was failed
+    # and therefore deaf between the two plan times)
+    rep2 = simulate(cost=cost, spec=spec, fabric="event", device_limit=None,
+                    faults={"fabric.pod0.ici[0,0]+x":
+                            [(0.0, "fail", None), (1e-6, "recover", None)]})
+    assert rep2.devices_done + rep2.devices_aborted == 4

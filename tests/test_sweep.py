@@ -170,3 +170,86 @@ def test_plancache_disk_tier_survives_memory_clear(clean_plancache,
     plancache.cached_decompose(topo, "all-gather", 2e6, list(range(4)))
     s = plancache.stats()
     assert s["disk_hits"] == 1 and s["misses"] == 0
+
+
+# -- per-config timeout + retry (ISSUE 9 satellite) --------------------------
+
+@pytest.fixture
+def no_cfg_timeout():
+    yield
+    sweep._configure_timeout(None)            # never leak into other tests
+
+
+def test_run_one_times_out_and_retries_once(monkeypatch, no_cfg_timeout):
+    import time as _time
+    cfg = dict(sweep.expand_grid(TINY)[0])
+    calls = {"n": 0}
+
+    def hang(c):
+        calls["n"] += 1
+        while True:
+            _time.sleep(0.01)
+
+    monkeypatch.setattr(sweep, "run_config", hang)
+    sweep._configure_timeout(0.2)
+    row = sweep._run_one(cfg)
+    assert calls["n"] == 2                    # exactly one retry
+    assert row["attempts"] == 2
+    assert "_ConfigTimeout" in row["error"]
+    assert row["config_id"] == cfg["config_id"]
+
+
+def test_run_one_hang_then_success_records_attempts(monkeypatch,
+                                                    no_cfg_timeout):
+    import time as _time
+    cfg = dict(sweep.expand_grid(TINY)[0])
+    calls = {"n": 0}
+
+    def flaky(c):
+        calls["n"] += 1
+        if calls["n"] == 1:                   # wedged on the first try only
+            while True:
+                _time.sleep(0.01)
+        return {"config_id": c["config_id"], "ok": True}
+
+    monkeypatch.setattr(sweep, "run_config", flaky)
+    sweep._configure_timeout(0.2)
+    row = sweep._run_one(cfg)
+    assert row == {"config_id": cfg["config_id"], "ok": True, "attempts": 2}
+
+
+def test_run_one_exception_still_no_retry(monkeypatch, no_cfg_timeout):
+    cfg = dict(sweep.expand_grid(TINY)[0])
+    monkeypatch.setattr(sweep, "run_config",
+                        lambda c: (_ for _ in ()).throw(ValueError("bad")))
+    sweep._configure_timeout(5.0)
+    row = sweep._run_one(cfg)
+    assert row["attempts"] == 1 and "ValueError" in row["error"]
+
+
+def test_sweep_rows_record_attempts(tmp_path, no_cfg_timeout):
+    out = str(tmp_path / "results.json")
+    stats = sweep.run_sweep(TINY, out=out, workers=0, quiet=True,
+                            config_timeout_s=60.0)
+    assert stats["errors"] == 0
+    rows = sweep.load_results(out)["rows"]
+    assert all(r["attempts"] == 1 for r in rows.values())
+
+
+# -- recovery grid (ISSUE 9) -------------------------------------------------
+
+def test_serving_recovery_grid_runs_with_recovery_columns():
+    assert {"chip_kill", "chip_kill_rejoin"} <= set(sweep.FAULT_PLANS)
+    grid = {**sweep.GRIDS["serving_recovery"],
+            "scenario": ["serving_poisson"], "scheduler": ["serial"],
+            "fabric": ["analytic"], "faults": ["chip_kill"]}
+    cfg = sweep.expand_grid(grid)[0]
+    assert cfg["sim"]["deadline_s"] and cfg["sim"]["recovery"]
+    row = sweep.run_config(cfg)
+    assert "error" not in row
+    assert row["collective_timeouts"] >= 1    # was hardcoded 0 before
+    assert row["retries"] >= 1 and row["recoveries"] >= 1
+    assert row["chip_deaths"] == 1
+    assert row["tenant_availability"][0] < 1.0
+    assert row["tenant_availability"][1] == 1.0
+    assert row["completed"] + row["dropped"] == row["offered"]

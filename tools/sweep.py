@@ -257,11 +257,27 @@ def _faults_transient_link(spec, fabric):
     return {"fabric.pod0.ici[0,0]+x": [(1e-4, "transient", 2e-4)]}
 
 
+def _faults_chip_kill(spec, fabric):
+    """Permanent chip death mid-trace.  Pair with ``sim.deadline_s`` (and
+    ``sim.recovery`` for serving scenarios, as the ``serving_recovery``
+    grid does) so the death surfaces as collective timeouts instead of a
+    stall bounded only by the per-config timeout."""
+    return {"chip1.prog": [(5e-3, "fail", None)]}
+
+
+def _faults_chip_kill_rejoin(spec, fabric):
+    """Chip death + rolling-restart rejoin inside the serving window:
+    the recovered chip re-registers and its tenant re-meshes back up."""
+    return {"chip1.prog": [(5e-3, "fail", None), (1.2e-2, "recover", None)]}
+
+
 FAULT_PLANS = {
     "none": _faults_none,
     "straggler_chip": _faults_straggler_chip,
     "slow_link": _faults_slow_link,
     "transient_link": _faults_transient_link,
+    "chip_kill": _faults_chip_kill,
+    "chip_kill_rejoin": _faults_chip_kill_rejoin,
 }
 
 
@@ -286,6 +302,18 @@ GRIDS = {
         "fabric": ["analytic", "event"],
         "faults": ["none", "slow_link", "straggler_chip"],
         "sim": {"device_limit": None, "repeat_cap": 4},
+    },
+    # serve-through-faults: chip kill / kill+rejoin against the recovery
+    # layer (docs/faults.md "Detection & recovery"); sim carries the
+    # deadline + recovery policy that run_serving needs
+    "serving_recovery": {
+        "scenario": ["serving_poisson", "serving_moe"],
+        "topology": ["pod2x2"],
+        "scheduler": ["serial", "bounded"],
+        "fabric": ["analytic", "event"],
+        "faults": ["none", "chip_kill", "chip_kill_rejoin"],
+        "sim": {"device_limit": None, "repeat_cap": 4,
+                "deadline_s": 5e-4, "recovery": True},
     },
     # the fleet sweep: thousands of scenario points per CI run is the
     # point, but the checked-in preset stays tractable on one host
@@ -381,7 +409,9 @@ def run_config(cfg: dict) -> dict:
         rep = serve_sim.run_serving(cost, spec=spec,
                                     scheduler=cfg["scheduler"],
                                     fabric=cfg["fabric"],
-                                    faults=faults or None)
+                                    faults=faults or None,
+                                    deadline_s=cfg["sim"].get("deadline_s"),
+                                    recovery=cfg["sim"].get("recovery"))
         wall = time.perf_counter() - t0
         after = plancache.stats()
         return {
@@ -392,7 +422,7 @@ def run_config(cfg: dict) -> dict:
             "events": rep.events,
             "devices": rep.devices,
             "collectives_completed": rep.collectives_completed,
-            "collective_timeouts": 0,
+            "collective_timeouts": rep.collective_timeouts,
             "compute_util": round(rep.compute_util, 4),
             "offered": rep.offered,
             "completed": rep.completed,
@@ -401,13 +431,20 @@ def run_config(cfg: dict) -> dict:
             "p50_s": rep.p50_s,
             "p99_s": rep.p99_s,
             "queue_mean_s": rep.queue_mean_s,
+            "retries": rep.retries,
+            "dropped": rep.dropped,
+            "recoveries": rep.recoveries,
+            "rejoins": rep.rejoins,
+            "chip_deaths": rep.chip_deaths,
+            "tenant_availability": rep.tenant_availability,
             "plan_lookups": after["lookups"] - before["lookups"],
             "plan_misses": after["misses"] - before["misses"],
         }
     rep = simulate(cost=cost, spec=spec, scheduler=cfg["scheduler"],
                    fabric=cfg["fabric"], faults=faults or None,
                    device_limit=cfg["sim"].get("device_limit"),
-                   repeat_cap=cfg["sim"].get("repeat_cap", 64))
+                   repeat_cap=cfg["sim"].get("repeat_cap", 64),
+                   deadline_s=cfg["sim"].get("deadline_s"))
     wall = time.perf_counter() - t0
     after = plancache.stats()
     return {
@@ -425,18 +462,64 @@ def run_config(cfg: dict) -> dict:
     }
 
 
-def _worker_init(cache_dir: typing.Optional[str]) -> None:
+_CFG_TIMEOUT: typing.Optional[float] = None   # per-config wall budget (s)
+
+
+class _ConfigTimeout(Exception):
+    """One config exceeded its wall-clock budget (raised from SIGALRM)."""
+
+
+def _on_alarm(signum, frame):
+    raise _ConfigTimeout()
+
+
+def _configure_timeout(timeout_s: typing.Optional[float]) -> None:
+    global _CFG_TIMEOUT
+    _CFG_TIMEOUT = timeout_s
+    if timeout_s and hasattr(signal, "SIGALRM"):
+        signal.signal(signal.SIGALRM, _on_alarm)
+
+
+def _worker_init(cache_dir: typing.Optional[str],
+                 config_timeout_s: typing.Optional[float] = None) -> None:
     plancache.configure(cache_dir)
     plancache.reset_stats()
+    _configure_timeout(config_timeout_s)
 
 
 def _run_one(cfg: dict) -> dict:
-    try:
-        return run_config(cfg)
-    except Exception as e:                    # one bad config != dead sweep
-        return {**{k: cfg[k] for k in ("config_id", "scenario", "topology",
-                                       "scheduler", "fabric", "faults")},
-                "error": f"{type(e).__name__}: {e}"}
+    """Run one config under a wall-clock budget, with one retry.
+
+    ``_run_one`` has always caught exceptions (one bad config != dead
+    sweep), but a *wedged* simulation -- a fault plan that stalls the
+    event loop with no deadline to cut it -- used to hang its worker and
+    with it the whole pool.  With a configured ``config_timeout_s`` each
+    attempt runs under a SIGALRM itimer: the first timeout gets one
+    retry (transient host stalls deserve a second chance and the memo /
+    plan caches are warm now), the second yields an error row so the
+    sweep always completes.  Every row records ``attempts``.
+    """
+    base = {k: cfg[k] for k in ("config_id", "scenario", "topology",
+                                "scheduler", "fabric", "faults")}
+    timed_out = None
+    for attempt in (1, 2):
+        armed = bool(_CFG_TIMEOUT) and hasattr(signal, "SIGALRM")
+        try:
+            if armed:
+                signal.setitimer(signal.ITIMER_REAL, _CFG_TIMEOUT)
+            row = run_config(cfg)
+            row["attempts"] = attempt
+            return row
+        except _ConfigTimeout:
+            timed_out = (f"_ConfigTimeout: exceeded "
+                         f"{_CFG_TIMEOUT}s (attempt {attempt})")
+        except Exception as e:                # one bad config != dead sweep
+            return {**base, "attempts": attempt,
+                    "error": f"{type(e).__name__}: {e}"}
+        finally:
+            if armed:
+                signal.setitimer(signal.ITIMER_REAL, 0.0)
+    return {**base, "attempts": 2, "error": timed_out}
 
 
 # --------------------------------------------------------------------------
@@ -486,15 +569,22 @@ def query_rows(data: dict, where: dict = None,
 
 def run_sweep(grid: dict, out: str, workers: int = None,
               cache_dir: str = None, force: bool = False,
-              quiet: bool = False) -> dict:
+              quiet: bool = False,
+              config_timeout_s: float = None) -> dict:
     """Expand, fan out, merge-write.  Returns the sweep stats dict
     (also merged into the results file's ``meta``).
 
     ``workers=0`` runs inline (no pool) -- for tests and tiny grids;
     ``workers=None`` picks ``os.cpu_count()``.  Workers are long-lived:
     one pool serves the entire grid.
+
+    ``config_timeout_s`` bounds each config's wall time (SIGALRM, so
+    inline and forked workers alike): first breach retries once, second
+    writes an error row -- a wedged simulation can no longer hang the
+    sweep.  ``None`` (default) keeps the old unbounded behavior.
     """
     t_start = time.perf_counter()
+    _configure_timeout(config_timeout_s)
     configs = expand_grid(grid)
     raw = grid_size(grid)
     existing = load_results(out)["rows"] if not force else {}
@@ -514,7 +604,7 @@ def run_sweep(grid: dict, out: str, workers: int = None,
             ctx = multiprocessing.get_context("fork")
             with ctx.Pool(processes=min(workers, len(todo)),
                           initializer=_worker_init,
-                          initargs=(cache_dir,)) as pool:
+                          initargs=(cache_dir, config_timeout_s)) as pool:
                 rows = list(pool.imap_unordered(_run_one, todo, chunksize=1))
             # workers are gone; their plan-cache traffic survives in the
             # per-row counters
@@ -585,6 +675,9 @@ def main(argv=None) -> int:
                             "('' disables the disk tier)")
     run_p.add_argument("--force", action="store_true",
                        help="re-simulate configs already in the results")
+    run_p.add_argument("--timeout", type=float, default=None,
+                       help="per-config wall budget in seconds (one "
+                            "retry, then an error row; default: none)")
 
     q_p = sub.add_parser("query", help="filter merged sweep results")
     q_p.add_argument("filters", nargs="*",
@@ -614,7 +707,8 @@ def main(argv=None) -> int:
         return 0
     stats = run_sweep(_load_grid(args.grid), out=args.out,
                       workers=args.workers,
-                      cache_dir=args.cache_dir or None, force=args.force)
+                      cache_dir=args.cache_dir or None, force=args.force,
+                      config_timeout_s=args.timeout)
     return 1 if stats["errors"] else 0
 
 

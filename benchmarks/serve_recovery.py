@@ -25,6 +25,14 @@ BENCH idiom; ``--quick`` writes ``*_quick`` sections):
   the behavioral fields (everything but the fabric-artifact ones) must
   match too.  Recovery control flow rides engine events, so the
   determinism guarantee may not narrow under faults.
+* ``spare_failover`` -- the same kill on a pod2x2x2 with and without a
+  reserved spare chip: the spare arm must restore goodput at least as
+  well as the shrink-to-survivors baseline, strictly improve
+  capacity-weighted availability, checkpoint prefill KV
+  (``prefill_saved_tokens > 0``) and price its migration over the
+  fabric (``migrated_bytes > 0``).
+* ``spare_identity`` -- the determinism matrix repeated on the
+  spare-claim + KV-migration trace.
 
 All gates are deterministic simulation quantities (no wall-clock), so
 they hold on any host.  ``--quick`` shrinks the trace for CI and exits
@@ -44,6 +52,7 @@ from repro.serve.sim import build_scenario, run_serving
 from benchmarks.serve_latency import merge_bench
 
 SPEC = SystemSpec(pod_shape=(2, 2))
+SPARE_SPEC = SystemSpec(pod_shape=(2, 2), num_pods=2)   # room for a pool
 SEED = 11
 DEADLINE_S = 5e-4
 FAULT_CHIP = "chip1.prog"      # tenant 0's second chip on pod2x2
@@ -182,13 +191,121 @@ def gates_pass(anatomy: dict, ident: dict) -> bool:
                     for f in ("analytic", "event")))
 
 
+# -- stateful failover: spare pool + KV migration (ISSUE 10) ----------------
+
+def _run_spare(params: dict, fabric: str, spares: int, **kw):
+    scen = build_scenario(SPARE_SPEC, rate_rps=params["rate_rps"],
+                          duration_s=params["duration_s"], seed=SEED,
+                          spares=spares)
+    assert scen is not None
+    faults = {FAULT_CHIP: [(params["fault_at_s"], "fail", None)]}
+    return run_serving(scen, spec=SPARE_SPEC, fabric=fabric, faults=faults,
+                       deadline_s=DEADLINE_S, recovery=True, **kw)
+
+
+def spare_failover(params: dict) -> dict:
+    """The same kill with and without one reserved spare, per fabric.
+    Gates: the spare arm's goodput-restore ratio is at least the
+    no-spare baseline's, its capacity-weighted availability strictly
+    improves, migrated retries resume decode from checkpointed KV
+    (``prefill_saved_tokens > 0``) over a priced transfer
+    (``migrated_bytes > 0``), and nothing sticks."""
+    out = {"params": dict(params), "deadline_s": DEADLINE_S,
+           "fault_chip": FAULT_CHIP, "spares": 1}
+    for fabric in ("analytic", "event"):
+        t0 = time.perf_counter()
+        base = _run_spare(params, fabric, spares=0)
+        spare = _run_spare(params, fabric, spares=1)
+        arms = {}
+        for label, rep in (("no_spare", base), ("spare", spare)):
+            stuck = rep.offered - rep.completed - rep.dropped
+            arms[label] = {
+                "offered": rep.offered,
+                "completed": rep.completed,
+                "dropped": rep.dropped,
+                "stuck": stuck,
+                "retries": rep.retries,
+                "chip_deaths": rep.chip_deaths,
+                "spare_claims": rep.spare_claims,
+                "spare_returns": rep.spare_returns,
+                "migrated_bytes": rep.migrated_bytes,
+                "prefill_saved_tokens": rep.prefill_saved_tokens,
+                "prefill_recompute_tokens": rep.prefill_recompute_tokens,
+                "availability_t0": round(
+                    rep.tenant_availability[AFFECTED_TENANT], 6),
+                "effective_availability_t0": round(
+                    rep.tenant_effective_availability[AFFECTED_TENANT], 6),
+                **restore_ratio(rep, params["fault_at_s"]),
+            }
+        b, s = arms["no_spare"], arms["spare"]
+        arms["wall_s"] = round(time.perf_counter() - t0, 3)
+        arms["gates"] = {
+            "zero_stuck": b["stuck"] == 0 and s["stuck"] == 0,
+            "one_death_each": (b["chip_deaths"] == 1
+                               and s["chip_deaths"] == 1),
+            "spare_claimed": s["spare_claims"] == 1,
+            "restore_at_least_baseline": (
+                s["restore_ratio"] is not None
+                and b["restore_ratio"] is not None
+                and s["restore_ratio"] >= b["restore_ratio"] - 1e-9),
+            "availability_strictly_improves": (
+                s["effective_availability_t0"]
+                > b["effective_availability_t0"]),
+            "prefill_checkpointed": s["prefill_saved_tokens"] > 0,
+            "migration_priced": s["migrated_bytes"] > 0,
+        }
+        out[fabric] = arms
+    return out
+
+
+def spare_identity(params: dict, combos) -> dict:
+    """The mid-failover determinism matrix on the spare-claim trace:
+    spare re-placement, KV migration and quorum verdicts are all engine
+    events, so the scheduler x executor x fabric guarantee must hold
+    through them too."""
+    results, identical = {}, True
+    oracles = {}
+    for fabric in ("analytic", "event"):
+        oracle = _run_spare(params, fabric, spares=1)
+        oracles[fabric] = oracle.summary()
+        matrix = {}
+        for sched, executor in combos:
+            rep = _run_spare(params, fabric, spares=1, scheduler=sched,
+                             executor=executor, max_workers=2)
+            ok = rep.summary() == oracle.summary()
+            matrix[f"{sched}+{executor}"] = ok
+            identical = identical and ok
+        results[fabric] = {"spare_claims": oracle.spare_claims,
+                           "migrated_bytes": oracle.migrated_bytes,
+                           "p99_ms": round(oracle.p99_s * 1e3, 4),
+                           "matrix": matrix}
+    behave = {f: {k: v for k, v in s.items() if k not in _FABRIC_ARTIFACTS}
+              for f, s in oracles.items()}
+    results["cross_fabric_behavioral"] = behave["analytic"] == behave["event"]
+    results["bit_identical"] = identical
+    results["combos_per_fabric"] = len(combos)
+    return results
+
+
+def spare_gates_pass(fail: dict, ident: dict) -> bool:
+    return (ident["bit_identical"]
+            and ident["cross_fabric_behavioral"]
+            and all(fail[f]["gates"].values()
+                    for f in ("analytic", "event")))
+
+
 def run_quick_gate() -> dict:
     """The CI-sized recovery gate, callable from fault_tolerance.py:
-    returns {"anatomy", "identity", "ok"} for the quick trace."""
+    returns {"anatomy", "identity", "spare", "spare_identity", "ok"}
+    for the quick trace."""
     anatomy = recovery_anatomy(QUICK)
     ident = recovery_identity(QUICK, MATRIX_QUICK)
+    fail = spare_failover(QUICK)
+    sident = spare_identity(QUICK, MATRIX_QUICK)
     return {"anatomy": anatomy, "identity": ident,
-            "ok": gates_pass(anatomy, ident)}
+            "spare": fail, "spare_identity": sident,
+            "ok": (gates_pass(anatomy, ident)
+                   and spare_gates_pass(fail, sident))}
 
 
 def main(argv=None) -> int:
@@ -203,10 +320,14 @@ def main(argv=None) -> int:
 
     anatomy = recovery_anatomy(params)
     ident = recovery_identity(params, combos)
+    fail = spare_failover(params)
+    sident = spare_identity(params, combos)
 
     suffix = "_quick" if args.quick else ""
     path = merge_bench({f"recovery{suffix}": anatomy,
-                        f"recovery_identity{suffix}": ident})
+                        f"recovery_identity{suffix}": ident,
+                        f"spare_failover{suffix}": fail,
+                        f"spare_identity{suffix}": sident})
 
     print("fabric,offered,completed,stuck,retries,recoveries,"
           "availability_t0,time_to_recovery_ms,restore_ratio")
@@ -220,7 +341,21 @@ def main(argv=None) -> int:
           f"combos per fabric mid-recovery, identical="
           f"{ident['bit_identical']}, cross-fabric behavioral="
           f"{ident['cross_fabric_behavioral']}")
-    ok = gates_pass(anatomy, ident)
+    print("# spare: fabric,restore_no_spare,restore_spare,"
+          "effav_no_spare,effav_spare,migrated_bytes,prefill_saved")
+    for fabric in ("analytic", "event"):
+        f = fail[fabric]
+        print(f"#   {fabric},{f['no_spare']['restore_ratio']},"
+              f"{f['spare']['restore_ratio']},"
+              f"{f['no_spare']['effective_availability_t0']},"
+              f"{f['spare']['effective_availability_t0']},"
+              f"{f['spare']['migrated_bytes']},"
+              f"{f['spare']['prefill_saved_tokens']}")
+    print(f"# spare identity: {sident['combos_per_fabric']} combos per "
+          f"fabric on the spare-claim trace, identical="
+          f"{sident['bit_identical']}, cross-fabric behavioral="
+          f"{sident['cross_fabric_behavioral']}")
+    ok = gates_pass(anatomy, ident) and spare_gates_pass(fail, sident)
     print(f"# gates {'pass' if ok else 'FAIL'}; wrote {path}")
     return 0 if ok else 1
 

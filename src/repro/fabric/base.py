@@ -45,6 +45,13 @@ class FabricController(Component):
     def __init__(self, name: str, backend: "FabricBackend") -> None:
         super().__init__(name)
         self.backend = backend
+        # per-kind traffic ledger: sum of nbytes * group fan-out over
+        # every started collective, integer-accumulated so the totals
+        # are independent of event-processing order (lives on the
+        # controller so the procs executor's end-of-run state sync
+        # carries it back, same idiom as the analytic link ledger)
+        self.kind_bytes: typing.Dict[str, int] = {}
+        self.collectives_started = 0
 
     def begin(self, key, kind: str, nbytes: float,
               group: typing.List[int]) -> None:
@@ -59,6 +66,9 @@ class FabricController(Component):
     def handle(self, event: Event) -> None:
         if event.kind == "request" and event.payload.kind == "start":
             key, kind, nbytes, group = event.payload.payload
+            self.kind_bytes[kind] = (self.kind_bytes.get(kind, 0)
+                                     + int(nbytes) * len(group))
+            self.collectives_started += 1
             self.begin(key, kind, nbytes, group)
 
 
@@ -121,6 +131,19 @@ class FabricBackend:
     def link_utilization(self, end_ps: int = None) -> dict:
         """Per-link busy fraction; only transfer-level backends have one."""
         return {}
+
+    def traffic_report(self) -> dict:
+        """Per-collective-kind byte totals (``nbytes * fan-out`` summed
+        over started collectives) plus the start count.  Read through
+        the controller so it survives the procs executor's shard
+        residency; identical across backends for the same workload --
+        it counts what was *asked* of the fabric, not how it moved."""
+        if self.controller is None:
+            return {}
+        out = {"collectives_started": self.controller.collectives_started}
+        for kind in sorted(self.controller.kind_bytes):
+            out[kind] = self.controller.kind_bytes[kind]
+        return out
 
     def describe(self) -> dict:
         return {"name": self.name}

@@ -148,8 +148,13 @@ class TenantSpec:
 
 @dataclasses.dataclass(frozen=True)
 class ServingScenario:
+    """``spares``: reserved chips owned by no tenant.  They idle in the
+    HealthMonitor's shared pool; on a ``chip_dead`` verdict the lowest
+    free spare is claimed for the victim's tenant, and a rejoin of the
+    original chip returns it."""
     name: str
     tenants: typing.Tuple[TenantSpec, ...]
+    spares: typing.Tuple[int, ...] = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -161,21 +166,41 @@ class RecoveryPolicy:
     * ``backoff_base_s`` -- requeue delay after an abort, doubled per
       retry (exponential backoff gives the detector time to fence the
       dead chip before the retry lands on it again);
-    * ``heartbeat_s`` -- HealthMonitor probe period (0 disables the
-      heartbeat loop; detection then rides collective timeouts alone,
-      so a tenant with no collectives in flight has no detector);
-    * ``probe_timeout_s`` -- how long a suspect has to answer a
-      targeted probe before it is declared dead (must exceed one
-      control-star round trip);
-    * ``suspect_threshold`` -- collective-timeout strikes that condemn a
-      chip even though it still answers probes (a wedged-but-pingable
-      chip: compute hangs, control plane lives).
+    * ``backoff_max_s`` -- cap on the exponential backoff.  Without it
+      ``backoff_base_s * 2**(n-1)`` is unbounded and a handful of
+      strikes push a retry past any plausible trace horizon; the cap
+      keeps high-retry requests landing (``None`` disables);
+    * ``heartbeat_s`` -- gossip heartbeat period for chips and their
+      tenant server (0 disables gossip; detection then rides
+      collective timeouts alone, so a tenant with no collectives in
+      flight has no detector);
+    * ``suspect_threshold`` -- consecutive missed heartbeat rounds
+      before a peer files a strike against the silent chip;
+    * ``quorum`` -- distinct accusers required before the
+      :class:`HealthMonitor` declares a suspect dead.  ``None`` derives
+      a majority of the suspect's live same-tenant peers (minimum 1).
+      Raising it above the reachable accuser count makes a
+      partitioned-but-alive chip explicitly representable: one
+      accuser's evidence is never enough to fence it;
+    * ``migrate_chunk_bytes`` -- per-chip payload of one KV-migration
+      all-to-all (fixed so migration plans are enumerable up front for
+      the bounded scheduler's strict-window guard).
     """
     max_retries: int = 3
     backoff_base_s: float = 3e-4
+    backoff_max_s: typing.Optional[float] = 2e-3
     heartbeat_s: float = 5e-4
-    probe_timeout_s: float = 1e-4
     suspect_threshold: int = 3
+    quorum: typing.Optional[int] = None
+    migrate_chunk_bytes: int = 1 << 20
+
+    def backoff_ps(self, n: int) -> int:
+        """Requeue delay (integer ps) for the ``n``-th retry: capped
+        exponential ``backoff_base_s * 2**(n-1)``."""
+        delay = self.backoff_base_s * (2 ** (max(1, n) - 1))
+        if self.backoff_max_s is not None:
+            delay = min(delay, self.backoff_max_s)
+        return s_to_ps(delay)
 
 
 class ServeSizing:
@@ -200,6 +225,10 @@ class ServeSizing:
                        + m.vocab_size * m.d_model)
         self.param_bytes = 2.0 * self.params          # bf16 weights
         self.d_model = m.d_model
+        self.layers = layers
+        # K + V, bf16, per committed context token, whole model (the
+        # mesh-wide footprint; a tp shard holds 1/tp of it)
+        self.kv_token_bytes = 2 * 2 * m.d_model * layers
         self.coll_ops = max(1, min(tenant.coll_ops, layers))
         self.layers_per_op = max(1, layers // self.coll_ops)
         self.moe = m.family == "moe" and m.num_experts > 1
@@ -225,6 +254,11 @@ class ServeSizing:
 
     def a2a_bytes(self, batch: int) -> int:
         return int(batch) * self.d_model * 2 * self.ept
+
+    def kv_bytes(self, tokens: int) -> int:
+        """Mesh-wide KV-cache footprint of ``tokens`` committed context
+        tokens (exact int: migration transfers are sized from it)."""
+        return int(tokens) * self.kv_token_bytes
 
 
 # ---------------------------------------------------------------------------
@@ -297,12 +331,17 @@ class SlotLedger:
 class _ReqLog:
     """Mutable per-request timing record (all integer picoseconds, so
     queue + prefill + decode == end-to-end exactly, no float residue).
-    ``retries`` counts recovery requeues (its work restarted from
-    scratch -- KV is lost with the mesh); ``dropped_ps`` stamps the SLO
+    ``retries`` counts recovery requeues; ``ckpt_tokens`` is the
+    committed context whose KV survives on (or was migrated to) the
+    mesh named by ``ckpt_group`` -- a re-admitted request only
+    recomputes prefill for the context beyond its checkpoint and
+    resumes decode at ``remaining``; the group lets a later membership
+    loss reconcile checkpoints of requests that are *not seated* at
+    verdict time (queued or in backoff); ``dropped_ps`` stamps the SLO
     drop when ``max_retries`` is exceeded."""
     __slots__ = ("uid", "arrival_ps", "prompt_len", "decode_len",
                  "admit_ps", "first_ps", "done_ps", "remaining",
-                 "retries", "dropped_ps")
+                 "retries", "dropped_ps", "ckpt_tokens", "ckpt_group")
 
     def __init__(self, req: ServeRequest) -> None:
         self.uid = req.uid
@@ -315,6 +354,8 @@ class _ReqLog:
         self.remaining = req.decode_len
         self.retries = 0
         self.dropped_ps = None
+        self.ckpt_tokens = 0
+        self.ckpt_group: tuple = ()   # mesh the checkpoint is sharded over
 
     def __getstate__(self):
         return {s: getattr(self, s) for s in self.__slots__}
@@ -334,35 +375,68 @@ class ServeProgram(Component):
     the coordinator star) and reports phase completion to its tenant
     server.  Mirrors DeviceProgram's issue/wait loop, but the "trace" is
     re-sent every iteration by the server (DP-3: only connections carry
-    cross-component traffic)."""
+    cross-component traffic).
+
+    With a recovery policy the program also gossips: every
+    ``heartbeat_ps`` it announces a ``beat`` on its control star (the
+    server relays it to the other members as ``peer_beat``), judges its
+    peers' beats, and files a ``strike`` with the HealthMonitor against
+    any peer silent for ``suspect_threshold`` consecutive rounds --
+    peer-reported evidence, not an omniscient observer.  A program built
+    with ``spare=True`` starts idle in the shared spare pool: it
+    registers with the monitor only, and joins a tenant's mesh when the
+    monitor sends ``claim`` (a ``release`` from the server returns it to
+    the pool)."""
 
     def __init__(self, name: str, device: int,
-                 group: typing.Tuple[int, ...]) -> None:
+                 group: typing.Tuple[int, ...], spare: bool = False,
+                 heartbeat_ps: int = 0, suspect_threshold: int = 3) -> None:
         super().__init__(name)
         self.device = device
         self.group = tuple(group)      # current serving mesh (re-formed
                                        # by each phase under recovery)
+        self.spare = spare
+        self.heartbeat_ps = heartbeat_ps
+        self.suspect_threshold = suspect_threshold
         self.ops: tuple = ()
         self.pc = 0
         self.iter_id = -1
         self.phases_done = 0
+        # gossip state: which control port talks to my server (spares
+        # have one per tenant, "ctrl0".."ctrlN", bound at claim time)
+        self._ctrl: typing.Optional[str] = None if spare else "ctrl"
+        self._beat_gen = 0             # invalidates stale beat timers
+        self._heard: set = set()       # peers heard since my last round
+        self._miss: typing.Dict[int, int] = {}
+        self._accused: set = set()
 
     def start(self) -> None:
         self.schedule("hello")
 
     def handle(self, event: Event) -> None:
         if event.kind == "hello":
-            self._register()
+            if self.spare:
+                self._enlist("register_spare")
+            else:
+                self._register()
             return
         if event.kind == "fault_wake":
             # The FaultInjector's scheduled wake.  A "fail" froze this
             # program before handle ran; reaching here means the action
             # just applied was a recover -- drop any pre-failure phase
             # state and announce ourselves again (rolling-restart
-            # rejoin: the server re-admits the device into its mesh).
+            # rejoin: the server re-admits the device into its mesh; a
+            # recovered spare returns to the pool).
             self.ops = ()
             self.pc = 0
-            self._register()
+            if self.spare and self._ctrl is None:
+                self._enlist("register_spare")
+            elif self._ctrl is not None:
+                self._register()
+            return
+        if event.kind == "beat":
+            if event.payload == self._beat_gen:
+                self._beat_round()
             return
         if event.kind != "request":
             return
@@ -370,6 +444,9 @@ class ServeProgram(Component):
         if req.kind == "phase":
             self.iter_id, self.ops, self.group = req.payload
             self.pc = 0
+            # mesh re-formed: judge only current peers, fresh slate
+            self._miss = {d: 0 for d in self.group if d != self.device}
+            self._accused &= set(self._miss)
             self._issue()
         elif req.kind == "compute_done":
             if req.payload != (self.iter_id, self.pc):
@@ -387,32 +464,84 @@ class ServeProgram(Component):
                 return      # a pre-abort collective timing out late
             self.ops = ()
             self.pc = 0
-            self.port("ctrl").send(Request(
-                src=self.port("ctrl"), dst=None, kind="phase_failed",
+            self._ctrl_port().send(Request(
+                src=self._ctrl_port(), dst=None, kind="phase_failed",
                 payload=self.iter_id))
-        elif req.kind == "ping":
-            # Heartbeat probe: answer immediately.  A failed program
-            # never reaches here -- the engine drops its events -- so a
-            # missing pong is exactly the liveness signal.
-            health = self.ports.get("health")
-            if health is not None and health.connection is not None:
-                health.send(Request(
-                    src=health, dst=None, kind="pong",
-                    payload=(self.device, req.payload)))
+        elif req.kind == "peer_beat":
+            self._heard.add(req.payload)
+            self._miss[req.payload] = 0
+            self._accused.discard(req.payload)
+        elif req.kind == "stop_beat":
+            self._beat_gen += 1        # tenant drained: stop gossiping
+        elif req.kind == "claim":
+            # the monitor re-places a dead chip's capacity onto me
+            self._ctrl = f"ctrl{req.payload}"
+            self.group = ()
+            self.iter_id = -1      # stale completions must mismatch
+            self._register()
+        elif req.kind == "release":
+            # rolled back to the pool (the original chip rejoined)
+            self._beat_gen += 1
+            self._ctrl = None
+            self.ops = ()
+            self.pc = 0
+            self.group = ()
+            self.iter_id = -1      # drop any in-flight phase's tokens
+            self._enlist("spare_free")
+
+    def _ctrl_port(self):
+        return self.port(self._ctrl)
+
+    def _enlist(self, kind: str) -> None:
+        health = self.ports.get("health")
+        if health is not None and health.connection is not None:
+            health.send(Request(
+                src=health, dst=None, kind=kind,
+                payload=(self.device, self)))
 
     def _register(self) -> None:
         # Register with the tenant server (spoke->hub auto-routes); the
         # reference rides the payload like coordinator joins do,
         # surviving the procs executor as a rank.  With a HealthMonitor
-        # wired, also enlist with the failure detector.
-        self.port("ctrl").send(Request(
-            src=self.port("ctrl"), dst=None, kind="register",
+        # wired, also enlist with the failure detector and start the
+        # gossip heartbeat.
+        self._ctrl_port().send(Request(
+            src=self._ctrl_port(), dst=None, kind="register",
             payload=(self.device, self)))
+        self._enlist("register_chip")
+        self._miss = {}
+        self._heard = set()
+        self._accused = set()
+        if self.heartbeat_ps:
+            self._beat_gen += 1
+            self.schedule("beat", self.heartbeat_ps,
+                          payload=self._beat_gen)
+
+    def _beat_round(self) -> None:
+        """One gossip round: judge the peers of my current mesh against
+        the beats heard since the last round, strike the silent ones,
+        announce my own beat, rearm."""
         health = self.ports.get("health")
-        if health is not None and health.connection is not None:
-            health.send(Request(
-                src=health, dst=None, kind="register_chip",
-                payload=(self.device, self)))
+        for peer in self.group:
+            if peer == self.device:
+                continue
+            if peer in self._heard:
+                continue
+            misses = self._miss.get(peer, 0) + 1
+            self._miss[peer] = misses
+            if (misses >= self.suspect_threshold
+                    and peer not in self._accused
+                    and health is not None
+                    and health.connection is not None):
+                self._accused.add(peer)
+                health.send(Request(
+                    src=health, dst=None, kind="strike",
+                    payload=(peer, self.device)))
+        self._heard = set()
+        self._ctrl_port().send(Request(
+            src=self._ctrl_port(), dst=None, kind="beat",
+            payload=self.device))
+        self.schedule("beat", self.heartbeat_ps, payload=self._beat_gen)
 
     def _expects_coll(self, key) -> bool:
         """Is this coordinator notification for the collective the
@@ -427,8 +556,8 @@ class ServeProgram(Component):
     def _issue(self) -> None:
         if self.pc >= len(self.ops):
             self.phases_done += 1
-            self.port("ctrl").send(Request(
-                src=self.port("ctrl"), dst=None, kind="phase_done",
+            self._ctrl_port().send(Request(
+                src=self._ctrl_port(), dst=None, kind="phase_done",
                 payload=self.iter_id))
             return
         op = self.ops[self.pc]
@@ -449,109 +578,106 @@ class ServeProgram(Component):
 
 
 class HealthMonitor(Component):
-    """Failure detector for the serving pod, fed by two signals:
+    """Quorum aggregator for peer-reported failure evidence, plus the
+    spare-pool arbiter.  Unlike the PR-9 monitor it never probes: it
+    only *counts accusers*.
 
-    * **collective timeouts** from the coordinator (``timeout_report``
-      carries the key and the joined roster): members missing from a
-      timed-out group are *suspects* -- each gets a strike plus a
-      targeted probe, and dies on a missed probe or on reaching
-      ``suspect_threshold`` strikes (a chip whose control plane answers
-      while its compute is wedged);
-    * optional **heartbeats**: every ``heartbeat_s`` the monitor judges
-      the previous round's pongs (a silent chip is declared dead) and
-      pings the live, un-quiesced ones -- this catches deaths that no
-      collective would ever surface (single-chip tenants, idle meshes).
+    Evidence arrives as:
 
-    Verdicts go to the owning :class:`TenantServer` as ``chip_dead``
-    requests (or ``coll_failed`` when a fully-joined collective died in
-    the fabric -- nobody to fence, the server just retries).  Everything
-    is ordinary events on a control star, so detection latency is
-    simulated and the whole protocol stays bit-identical across
-    schedulers and executors.  Servers send ``quiesce`` once their trace
-    is fully resolved; the probe loop stops when no live, un-quiesced
-    chip remains, bounding the event horizon."""
+    * ``strike`` -- gossip verdicts from chips (accuser = device id) and
+      tenant servers (accuser = ``-1 - tid``; the server's own judgment
+      is what detects deaths on single-chip tenants, where no peer
+      exists to gossip);
+    * ``timeout_report`` from the coordinator (key + joined roster):
+      every member that *did* join a timed-out collective is treated as
+      an accuser of every member that did not -- the roster is exactly
+      the peers' testimony.
+
+    A suspect is declared dead only when its distinct accusers reach the
+    quorum (``RecoveryPolicy.quorum``, default: majority of its live
+    same-tenant peers, minimum 1).  Below quorum the suspect keeps its
+    seat -- a partitioned-but-alive chip is representable: one accuser's
+    evidence never fences it.  A fully-joined timed-out collective has
+    no suspects at all and is reported to the owning server as
+    ``coll_failed`` (a fabric stall: retry, blame no chip).
+
+    On a death verdict the monitor also arbitrates the shared spare
+    pool: the lowest free spare is claimed for the victim's tenant (the
+    ``chip_dead`` verdict carries it), and a ``spare_free`` from a
+    released spare returns it.  Everything is ordinary events on the
+    health star, so detection latency is simulated and the protocol
+    stays bit-identical across schedulers and executors."""
 
     def __init__(self, name: str,
                  tenants: typing.Tuple[typing.Tuple[int, typing.Tuple[int, ...]], ...],
-                 policy: RecoveryPolicy) -> None:
+                 policy: RecoveryPolicy,
+                 spares: typing.Tuple[int, ...] = ()) -> None:
         super().__init__(name)
         self.policy = policy
         self.tenant_of = {d: tid for tid, devs in tenants for d in devs}
-        self.expect_chips = sum(len(devs) for _, devs in tenants)
-        self.expect_servers = len(tenants)
         self.chips: typing.Dict[int, object] = {}      # device -> program
         self.servers: typing.Dict[int, object] = {}    # tenant id -> server
+        self.spares: typing.Dict[int, object] = {}     # spare id -> program
+        self.pool: typing.List[int] = []               # free spares (sorted)
+        self.expected_spares = tuple(spares)
         self.dead: set = set()
         self.deaths = 0                                # monotone (rejoins
                                                        # shrink ``dead``)
-        self.strikes: typing.Dict[int, int] = {}
-        self.last_ack: typing.Dict[int, int] = {}      # device -> probe seq
-        self.seq = 0
+        self.accusers: typing.Dict[int, set] = {}      # suspect -> accusers
         self.quiesced: set = set()                     # tenant ids drained
-        self._probing = False
 
     def handle(self, event: Event) -> None:
-        if event.kind == "probe":
-            self._probe()
-        elif event.kind == "verdict":
-            device, seq = event.payload
-            if device not in self.dead and self.last_ack.get(device, -1) < seq:
-                self._declare_dead(device)   # targeted probe unanswered
-        elif event.kind == "request":
-            req = event.payload
-            if req.kind == "register_chip":
-                device, prog = req.payload
-                self.chips[device] = prog
-                self.dead.discard(device)    # rolling-restart rejoin
-                self.strikes.pop(device, None)
-                self.last_ack[device] = self.seq   # fresh: skip this round
-                self._maybe_start()
-            elif req.kind == "register_server":
-                tid, server = req.payload
-                self.servers[tid] = server
-                self._maybe_start()
-            elif req.kind == "pong":
-                device, seq = req.payload
-                if self.last_ack.get(device, -1) < seq:
-                    self.last_ack[device] = seq
-            elif req.kind == "timeout_report":
-                key, joined = req.payload
-                self._on_timeout(key, joined)
-            elif req.kind == "quiesce":
-                self.quiesced.add(req.payload)
-
-    # -- heartbeat loop ----------------------------------------------------
-    def _maybe_start(self) -> None:
-        if (self._probing or not self.policy.heartbeat_s
-                or len(self.chips) < self.expect_chips
-                or len(self.servers) < self.expect_servers):
+        if event.kind != "request":
             return
-        self._probing = True
-        self.schedule("probe", s_to_ps(self.policy.heartbeat_s))
+        req = event.payload
+        if req.kind == "register_chip":
+            device, prog = req.payload
+            self.chips[device] = prog
+            self.dead.discard(device)        # rolling-restart rejoin
+            self.accusers.pop(device, None)  # old evidence is stale
+        elif req.kind == "register_spare":
+            device, prog = req.payload
+            self.spares[device] = prog
+            self.dead.discard(device)
+            self.accusers.pop(device, None)
+            if device not in self.pool and device not in self.tenant_of:
+                bisect.insort(self.pool, device)
+        elif req.kind == "register_server":
+            tid, server = req.payload
+            self.servers[tid] = server
+        elif req.kind == "strike":
+            suspect, accuser = req.payload
+            self._accuse(suspect, (accuser,))
+        elif req.kind == "timeout_report":
+            key, joined = req.payload
+            self._on_timeout(key, joined)
+        elif req.kind == "spare_free":
+            device, _prog = req.payload
+            self.tenant_of.pop(device, None)
+            self.accusers.pop(device, None)
+            if device not in self.pool and device not in self.dead:
+                bisect.insort(self.pool, device)
+        elif req.kind == "quiesce":
+            self.quiesced.add(req.payload)
 
-    def _live_targets(self) -> list:
-        return [d for d in sorted(self.chips)
-                if d not in self.dead
-                and self.tenant_of[d] not in self.quiesced]
+    # -- evidence aggregation ----------------------------------------------
+    def _quorum_for(self, suspect: int) -> int:
+        if self.policy.quorum is not None:
+            return max(1, self.policy.quorum)
+        tid = self.tenant_of.get(suspect)
+        peers = sum(1 for d, t in self.tenant_of.items()
+                    if t == tid and d != suspect and d not in self.dead
+                    and d in self.chips)
+        return max(1, (peers + 1) // 2)
 
-    def _probe(self) -> None:
-        targets = self._live_targets()
-        if not targets:
-            # every tenant drained (or fully dead): stop the loop.  A
-            # later register_chip restarts it via _maybe_start.
-            self._probing = False
+    def _accuse(self, suspect: int, accusers) -> None:
+        if suspect in self.dead or suspect not in self.tenant_of:
             return
-        for device in targets:             # judge the previous round
-            if self.last_ack.get(device, -1) < self.seq:
-                self._declare_dead(device)
-        self.seq += 1
-        for device in self._live_targets():
-            hub = self.port("hub")
-            hub.send(Request(src=hub, dst=self.chips[device], kind="ping",
-                             payload=self.seq))
-        self.schedule("probe", s_to_ps(self.policy.heartbeat_s))
+        acc = self.accusers.setdefault(suspect, set())
+        acc.update(accusers)
+        if len(acc) >= self._quorum_for(suspect):
+            self._declare_dead(suspect)
 
-    # -- collective-timeout path -------------------------------------------
     def _on_timeout(self, key, joined) -> None:
         group = key[2]
         joined_set = set(joined)
@@ -568,32 +694,32 @@ class HealthMonitor(Component):
                 hub.send(Request(src=hub, dst=server, kind="coll_failed",
                                  payload=key))
             return
+        witnesses = sorted(joined_set)
         for device in suspects:
-            strikes = self.strikes.get(device, 0) + 1
-            self.strikes[device] = strikes
-            if strikes >= self.policy.suspect_threshold:
-                self._declare_dead(device)
-            else:
-                # Guilty unless it answers a targeted probe in time.
-                self.seq += 1
-                hub = self.port("hub")
-                hub.send(Request(src=hub, dst=self.chips[device],
-                                 kind="ping", payload=self.seq))
-                self.schedule("verdict",
-                              s_to_ps(self.policy.probe_timeout_s),
-                              payload=(device, self.seq))
+            self._accuse(device, witnesses)
 
     def _declare_dead(self, device: int) -> None:
         if device in self.dead:
             return
         self.dead.add(device)
         self.deaths += 1
-        self.strikes.pop(device, None)
-        server = self.servers.get(self.tenant_of.get(device))
+        self.accusers.pop(device, None)
+        tid = self.tenant_of.get(device)
+        server = self.servers.get(tid)
+        spare = None
+        if self.pool:
+            # re-place the lost capacity: claim the lowest free spare
+            # for the victim's tenant
+            spare = self.pool.pop(0)
+            self.tenant_of[spare] = tid
+            self.chips[spare] = self.spares[spare]
+            hub = self.port("hub")
+            hub.send(Request(src=hub, dst=self.spares[spare],
+                             kind="claim", payload=tid))
         if server is not None:
             hub = self.port("hub")
             hub.send(Request(src=hub, dst=server, kind="chip_dead",
-                             payload=device))
+                             payload=(device, spare)))
 
 
 class TenantServer(Component):
@@ -607,14 +733,19 @@ class TenantServer(Component):
 
     With a :class:`RecoveryPolicy` the server also *serves through*
     faults: a ``chip_dead`` verdict (or a ``phase_failed`` from its own
-    chips) aborts the in-flight iteration, evicts every seated request
-    (their KV shards died with the mesh), requeues each with exponential
-    backoff -- or drops it past ``max_retries`` -- and re-forms the
-    serving group from the surviving members (elastic re-mesh: the next
-    phase simply names the smaller group and re-sized per-chip ops).  A
-    dead device registering again rejoins the mesh; seated requests are
-    resharded (evicted + immediately requeued, no retry penalty) before
-    the first iteration on the grown group."""
+    chips) aborts the in-flight iteration, evicts every seated request,
+    migrates the KV shards that survive on live chips to the re-formed
+    mesh (a priced fabric transfer; only shards lost with the dead chip
+    are recomputed at re-admission), requeues each with capped
+    exponential backoff -- or drops it past ``max_retries`` -- and
+    re-forms the serving group from the surviving members plus any
+    spare the monitor claimed for it.  A dead device registering again
+    rejoins the mesh (returning a claimed spare to the pool); seated
+    requests are resharded (evicted + immediately requeued, no retry
+    penalty, full KV migrated) before the first iteration on the new
+    group.  The server also takes part in gossip detection: it relays
+    member beats and files its own strikes (the only accuser a
+    single-chip tenant has)."""
 
     def __init__(self, name: str, tenant: TenantSpec, tid: int = 0,
                  policy: RecoveryPolicy = None) -> None:
@@ -636,7 +767,7 @@ class TenantServer(Component):
         self._phase_replies = 0
         self._newly: typing.List[int] = []
         # -- recovery state -------------------------------------------------
-        self.dead: set = set()               # fenced devices
+        self.dead: set = set()               # fenced original devices
         self.retries = 0                     # recovery requeues issued
         self.drops: typing.List[int] = []    # uids dropped past max_retries
         self.recoveries = 0                  # outage windows closed
@@ -646,6 +777,30 @@ class TenantServer(Component):
         self._serving_group: tuple = ()      # mesh the seated KV lives on
         self._resolved = 0                   # done + dropped requests
         self._quiesced = False
+        self._abort_stamp: typing.Optional[int] = None
+        # -- spare pool -----------------------------------------------------
+        self.claimed: set = set()            # spares serving this tenant
+        self._pending_spare: set = set()     # claimed, not yet registered
+        self._release_on_register: set = set()
+        self._release_pending = False
+        self.spare_claims = 0
+        self.spare_returns = 0
+        # -- KV migration ---------------------------------------------------
+        self.migrated_bytes = 0
+        self.prefill_saved_tokens = 0
+        self.prefill_recompute_tokens = 0
+        self._mig_pending = 0                # KV bytes awaiting transfer
+        # -- gossip (server-side judge + relay) -----------------------------
+        self._beat_heard: set = set()
+        self._beat_miss: typing.Dict[int, int] = {}
+        self._beat_accused: set = set()
+        self._ticking = False
+        # -- capacity trace for effective availability ----------------------
+        # armed once the mesh first fills: startup registration latency
+        # is not a capacity dip
+        self._cap_log: typing.List[typing.Tuple[int, int]] = [
+            (0, len(tenant.devices))]
+        self._cap_armed = False
 
     def start(self) -> None:
         for r in self.tenant.requests:
@@ -655,6 +810,7 @@ class TenantServer(Component):
             health.send(Request(
                 src=health, dst=None, kind="register_server",
                 payload=(self.tid, self)))
+        self._maybe_start_tick()
         self._maybe_quiesce()   # a tenant with an empty trace is done
 
     def handle(self, event: Event) -> None:
@@ -668,15 +824,14 @@ class TenantServer(Component):
                     and uid not in self.ledger.seated):
                 self.queue.append(uid)
             self._maybe_iterate()
+        elif event.kind == "beat_tick":
+            self._beat_tick()
         elif event.kind == "request":
             req = event.payload
             if req.kind == "register":
-                device, prog = req.payload
-                if device in self.dead:          # rolling-restart rejoin
-                    self.dead.discard(device)
-                    self.rejoins += 1
-                self.members[device] = prog
-                self._maybe_iterate()
+                self._on_register(*req.payload)
+            elif req.kind == "beat":
+                self._on_beat(req.payload)
             elif req.kind == "phase_done":
                 if req.payload != self.iter_id or not self._phase_replies:
                     return                       # reply from an aborted phase
@@ -693,14 +848,80 @@ class TenantServer(Component):
                 if self.policy is not None and self._phase_replies:
                     self._abort_iteration()
             elif req.kind == "chip_dead":
-                self._on_chip_dead(req.payload)
+                self._on_chip_dead(*req.payload)
+
+    # -- membership --------------------------------------------------------
+    def _on_register(self, device: int, prog) -> None:
+        if device in self._release_on_register:
+            # claimed while its original was already rejoining: bounce
+            # the spare straight back to the pool, never a member
+            self._release_on_register.discard(device)
+            self.spare_returns += 1
+            self.port("ctrl").send(Request(
+                src=self.port("ctrl"), dst=prog, kind="release"))
+            return
+        if device in self.dead:                  # rolling-restart rejoin
+            self.dead.discard(device)
+            self.rejoins += 1
+            # capacity is back: return a spare -- but never mid-phase
+            # (the in-flight phase still needs its phase_done)
+            if self._phase_replies:
+                self._release_pending = True
+            else:
+                self._release_one_spare()
+        elif device in self._pending_spare:
+            self._pending_spare.discard(device)
+            self.claimed.add(device)
+        elif (device not in self.tenant.devices
+              and device not in self.claimed):
+            self.claimed.add(device)             # recovered spare rejoining
+        self.members[device] = prog
+        self._beat_miss[device] = 0
+        self._beat_accused.discard(device)
+        self._log_cap()
+        self._maybe_start_tick()
+        self._maybe_iterate()
+
+    def _release_one_spare(self) -> None:
+        """The original chip rejoined: hand the highest claimed spare
+        back to the shared pool (lowest spares stay claimed longest, the
+        mirror image of the claim order)."""
+        if self.claimed:
+            sp = max(self.claimed)
+            self.claimed.discard(sp)
+            prog = self.members.pop(sp, None)
+            self._beat_miss.pop(sp, None)
+            self._beat_accused.discard(sp)
+            self.spare_returns += 1
+            if prog is not None:
+                self.port("ctrl").send(Request(
+                    src=self.port("ctrl"), dst=prog, kind="release"))
+            self._log_cap()
+        elif self._pending_spare:
+            sp = max(self._pending_spare)
+            self._pending_spare.discard(sp)
+            self._release_on_register.add(sp)
 
     # -- recovery ----------------------------------------------------------
-    def _on_chip_dead(self, device: int) -> None:
+    def _on_chip_dead(self, device: int, spare=None) -> None:
         if self.policy is None or device in self.dead:
             return
-        self.dead.add(device)
+        if device in self.claimed:
+            self.claimed.discard(device)         # a claimed spare died
+        elif device in self._pending_spare:
+            self._pending_spare.discard(device)
+        elif device in self.tenant.devices:
+            self.dead.add(device)
+        else:
+            return                               # stale / unknown verdict
         self.members.pop(device, None)
+        self._beat_miss.pop(device, None)
+        self._beat_accused.discard(device)
+        if spare is not None:
+            self._pending_spare.add(spare)
+            self.spare_claims += 1
+        self._log_cap()
+        self._reconcile_unseated()
         if self._phase_replies or self.ledger.in_use:
             # in-flight iteration and/or seated KV sharded over a mesh
             # that just lost a member: abort, reclaim, requeue
@@ -708,44 +929,166 @@ class TenantServer(Component):
         else:
             self._maybe_iterate()
 
+    # -- gossip relay + server-side judge ----------------------------------
+    def _on_beat(self, device: int) -> None:
+        self._beat_heard.add(device)
+        self._beat_miss[device] = 0
+        self._beat_accused.discard(device)
+        ctrl = self.port("ctrl")
+        for other, prog in sorted(self.members.items()):
+            if other != device:
+                ctrl.send(Request(src=ctrl, dst=prog, kind="peer_beat",
+                                  payload=device))
+
+    def _maybe_start_tick(self) -> None:
+        if (self._ticking or self._quiesced or not self.members
+                or self.policy is None or not self.policy.heartbeat_s):
+            return
+        self._ticking = True
+        self.schedule("beat_tick", s_to_ps(self.policy.heartbeat_s))
+
+    def _beat_tick(self) -> None:
+        if self._quiesced or not self.members:
+            self._ticking = False      # drained or fully fenced: stop
+            return
+        health = self.ports.get("health")
+        for d in sorted(set(self.members) | self._pending_spare):
+            if d in self._beat_heard:
+                continue
+            misses = self._beat_miss.get(d, 0) + 1
+            self._beat_miss[d] = misses
+            if (misses >= self.policy.suspect_threshold
+                    and d not in self._beat_accused
+                    and health is not None
+                    and health.connection is not None):
+                self._beat_accused.add(d)
+                health.send(Request(
+                    src=health, dst=None, kind="strike",
+                    payload=(d, -1 - self.tid)))
+        self._beat_heard = set()
+        self.schedule("beat_tick", s_to_ps(self.policy.heartbeat_s))
+
+    def _log_cap(self) -> None:
+        if not self._cap_armed:
+            if len(self.members) >= len(self.tenant.devices):
+                self._cap_armed = True   # seed entry already says full
+            return
+        self._cap_log.append((self.engine.now, len(self.members)))
+
     def _abort_iteration(self) -> None:
         now = self.engine.now
         if self._outage_start is None:
             self._outage_start = now
         self._phase_replies = 0
         self._newly = []
-        for uid in sorted(self.ledger.seated):
-            self.ledger.evict(uid)
-            rec = self.recs[uid]
-            rec.admit_ps = None
-            rec.first_ps = None
-            rec.remaining = rec.decode_len       # KV lost: restart
-            rec.retries += 1
-            if rec.retries > self.policy.max_retries:
-                rec.dropped_ps = now             # SLO drop
-                self.drops.append(uid)
-                self._resolved += 1
-            else:
-                self.retries += 1
-                delay = s_to_ps(self.policy.backoff_base_s
-                                * (2 ** (rec.retries - 1)))
-                self.schedule("requeue", delay, payload=uid)
-        self._maybe_iterate()
-        self._maybe_quiesce()
-
-    def _reshard(self, group: tuple) -> None:
-        """Membership changed under seated requests (a rejoin): their KV
-        shards live on the old mesh, so evict and requeue them ahead of
-        the FIFO queue -- no retry penalty, the reshard is planned."""
+        # Idempotence: a second chip_dead verdict landing at the same
+        # instant re-aborts seats the first abort's _maybe_iterate just
+        # re-admitted -- those must not take a second retry penalty.
+        penalize = self._abort_stamp != now
+        if self._release_pending:
+            self._release_pending = False
+            self._release_one_spare()
+        tp_old = max(1, len(self._serving_group))
+        lost_devs = len(set(self._serving_group) - set(self.members))
+        survivors = tuple(sorted(set(self._serving_group)
+                                 & set(self.members)))
         front = []
         for uid in sorted(self.ledger.seated):
             self.ledger.evict(uid)
             rec = self.recs[uid]
             rec.admit_ps = None
             rec.first_ps = None
-            rec.remaining = rec.decode_len
+            # KV migration: shards on surviving chips move to the new
+            # mesh; only the dead chip's shard of the committed context
+            # is recomputed (ceil of the lost fraction).
+            resident = rec.ckpt_tokens
+            lost_tokens = (-(-resident * lost_devs // tp_old)
+                           if resident else 0)
+            saved = resident - lost_tokens
+            dropped = False
+            if penalize:
+                rec.retries += 1
+                if rec.retries > self.policy.max_retries:
+                    rec.dropped_ps = now             # SLO drop
+                    rec.ckpt_tokens = 0
+                    dropped = True
+                    self.drops.append(uid)
+                    self._resolved += 1
+                else:
+                    self.retries += 1
+                    self.schedule("requeue",
+                                  self.policy.backoff_ps(rec.retries),
+                                  payload=uid)
+            else:
+                front.append(uid)                    # no double penalty
+            if dropped:
+                continue             # a dropped seat's KV never moves
+            rec.ckpt_tokens = saved
+            rec.ckpt_group = survivors if saved > 0 else ()
+            if saved > 0:
+                self.prefill_saved_tokens += saved
+                if lost_devs > 0:
+                    self._mig_pending += (
+                        self.sizing.kv_bytes(resident)
+                        * (tp_old - lost_devs) // tp_old)
+            if lost_tokens > 0:
+                self.prefill_recompute_tokens += lost_tokens
+        if front:
+            self.queue[:0] = front
+        if penalize:
+            self._abort_stamp = now
+        self._maybe_iterate()
+        self._maybe_quiesce()
+
+    def _reshard(self, group: tuple) -> None:
+        """Membership changed under seated requests (a rejoin): their KV
+        shards live on the old mesh, so evict and requeue them ahead of
+        the FIFO queue -- no retry penalty, the reshard is planned and
+        every shard survives, so the whole committed context migrates."""
+        front = []
+        for uid in sorted(self.ledger.seated):
+            self.ledger.evict(uid)
+            rec = self.recs[uid]
+            rec.admit_ps = None
+            rec.first_ps = None
+            if rec.ckpt_tokens > 0:
+                self.prefill_saved_tokens += rec.ckpt_tokens
+                self._mig_pending += self.sizing.kv_bytes(rec.ckpt_tokens)
+                rec.ckpt_group = group
             front.append(uid)
         self.queue[:0] = front
+
+    def _reconcile_unseated(self) -> None:
+        """Membership just shrank: requests holding a checkpoint while
+        *not seated* (queued, or waiting out a requeue backoff) lose the
+        dead chip's shard of it too.  Recompute the lost fraction, keep
+        the survivors' share (priced as migration onto the next mesh),
+        exactly as :meth:`_abort_iteration` does for seated requests --
+        without this, a request aborted by ``coll_failed`` before the
+        quorum verdict lands would resume on the new mesh with its full
+        checkpoint for free."""
+        members = set(self.members)
+        for uid in sorted(self.recs):
+            rec = self.recs[uid]
+            if (rec.ckpt_tokens <= 0 or not rec.ckpt_group
+                    or rec.done_ps is not None or rec.dropped_ps is not None
+                    or uid in self.ledger.seated):
+                continue
+            grp = rec.ckpt_group
+            lost = len(set(grp) - members)
+            if lost == 0:
+                continue
+            tp, resident = len(grp), rec.ckpt_tokens
+            lost_tokens = -(-resident * lost // tp)
+            saved = resident - lost_tokens
+            rec.ckpt_tokens = saved
+            rec.ckpt_group = (tuple(sorted(set(grp) & members))
+                              if saved > 0 else ())
+            self.prefill_recompute_tokens += lost_tokens
+            if saved > 0:
+                self.prefill_saved_tokens += saved
+                self._mig_pending += (
+                    self.sizing.kv_bytes(resident) * (tp - lost) // tp)
 
     def _maybe_quiesce(self) -> None:
         if self._quiesced or self._resolved < len(self.recs):
@@ -755,6 +1098,9 @@ class TenantServer(Component):
             self._quiesced = True
             health.send(Request(
                 src=health, dst=None, kind="quiesce", payload=self.tid))
+            ctrl = self.port("ctrl")
+            for d, prog in sorted(self.members.items()):
+                ctrl.send(Request(src=ctrl, dst=prog, kind="stop_beat"))
 
     def _sizing_for(self, n: int) -> ServeSizing:
         s = self._sizings.get(n)
@@ -766,7 +1112,8 @@ class TenantServer(Component):
     def _maybe_iterate(self) -> None:
         if self._phase_replies:                  # iteration in flight
             return
-        expected = len(self.tenant.devices) - len(self.dead)
+        expected = (len(self.tenant.devices) - len(self.dead)
+                    + len(self.claimed) + len(self._pending_spare))
         if len(self.members) < expected or not self.members:
             return              # chips still registering, or all fenced
         group = tuple(sorted(self.members))
@@ -778,6 +1125,10 @@ class TenantServer(Component):
             self.ledger.admit(uid)
             rec = self.recs[uid]
             rec.admit_ps = self.engine.now
+            if rec.ckpt_tokens:
+                # any surviving shards were priced onto this mesh at
+                # eviction/reconcile time; the checkpoint now lives here
+                rec.ckpt_group = group
             admitted.append(uid)
         self._serving_group = group
         if not self.ledger.in_use:
@@ -796,11 +1147,27 @@ class TenantServer(Component):
         s = self._sizing_for(len(group))
         it = self.iter_id
         ops = []
+        if self._mig_pending:
+            if len(group) > 1:
+                # KV migration rides the serving fabric: fixed-size
+                # all-to-all chunks (plan keys enumerable for bounded)
+                chunk = self.policy.migrate_chunk_bytes
+                nops = -(-self._mig_pending // (chunk * len(group)))
+                for k in range(nops):
+                    ops.append(("coll", f"{self.name}.i{it}.mig{k}",
+                                "all-to-all", chunk))
+                self.migrated_bytes += self._mig_pending
+            # single survivor: shards are already local, nothing moves
+            self._mig_pending = 0
         for uid in admitted:
             rec = self.recs[uid]
-            ops.append(("compute", f"{self.name}.i{it}.prefill{uid}",
-                        s.prefill_flops(rec.prompt_len),
-                        s.prefill_hbm(rec.prompt_len)))
+            # checkpointed prefill: only the context beyond the migrated
+            # checkpoint is (re)computed; fresh requests have ckpt 0
+            done = rec.decode_len - rec.remaining
+            need = rec.prompt_len + done - rec.ckpt_tokens
+            if need > 0:
+                ops.append(("compute", f"{self.name}.i{it}.prefill{uid}",
+                            s.prefill_flops(need), s.prefill_hbm(need)))
         batch = self.ledger.in_use
         ops.append(("compute", f"{self.name}.i{it}.decode",
                     s.decode_flops(batch), s.decode_hbm(batch)))
@@ -829,12 +1196,20 @@ class TenantServer(Component):
                 self.ledger.release(uid)
                 self.completed_order.append(uid)
                 self._resolved += 1
+            else:
+                # commit: this iteration's KV writes are durable shards
+                rec.ckpt_tokens = (rec.prompt_len
+                                   + (rec.decode_len - rec.remaining))
+                rec.ckpt_group = self._serving_group
         if self._outage_start is not None:
             # a completed iteration on the re-formed mesh closes the
             # outage window -- the tenant is serving again
             self.outages.append((self._outage_start, now))
             self._outage_start = None
             self.recoveries += 1
+        if self._release_pending:
+            self._release_pending = False
+            self._release_one_spare()
         self._maybe_iterate()
         self._maybe_quiesce()
 
@@ -870,6 +1245,18 @@ class ServingSystem:
                         f"device {d} assigned to two tenants; tenant "
                         f"placements must be disjoint")
                 seen.add(d)
+        for d in scenario.spares:
+            if not 0 <= d < spec.total_chips:
+                raise ValueError(
+                    f"spare device {d} outside topology with "
+                    f"{spec.total_chips} chips")
+            if d in seen:
+                raise ValueError(
+                    f"spare device {d} already assigned to a tenant")
+            seen.add(d)
+        if scenario.spares and recovery is None:
+            raise ValueError("spares need a recovery policy (the "
+                             "HealthMonitor arbitrates the pool)")
         self.scenario = scenario
         self.spec = spec
         self.policy = recovery
@@ -891,7 +1278,8 @@ class ServingSystem:
                 "health.monitor",
                 tenants=tuple((tid, t.devices)
                               for tid, t in enumerate(scenario.tenants)),
-                policy=recovery))
+                policy=recovery,
+                spares=scenario.spares))
             health_conn = self.engine.register(
                 StarConnection("health.star", self.monitor.port("hub"),
                                latency_s=spec.ctrl_latency_s))
@@ -900,6 +1288,11 @@ class ServingSystem:
         self.programs: typing.List[ServeProgram] = []
         self.cores: typing.List[TensorCore] = []
         self.hbms: typing.List[HbmController] = []
+        heartbeat_ps = (s_to_ps(recovery.heartbeat_s)
+                        if recovery is not None and recovery.heartbeat_s
+                        else 0)
+        suspect = recovery.suspect_threshold if recovery is not None else 3
+        ctrl_conns: typing.List[StarConnection] = []
         for tid, tenant in enumerate(scenario.tenants):
             server = self.engine.register(
                 TenantServer(f"tenant{tid}.server", tenant, tid=tid,
@@ -907,6 +1300,7 @@ class ServingSystem:
             ctrl = self.engine.register(
                 StarConnection(f"tenant{tid}.ctrl", server.port("ctrl"),
                                latency_s=spec.ctrl_latency_s))
+            ctrl_conns.append(ctrl)
             if health_conn is not None:
                 health_conn.plug(server.port("health"))
             for d in tenant.devices:
@@ -915,7 +1309,9 @@ class ServingSystem:
                 hbm = self.engine.register(
                     HbmController(f"chip{d}.hbm", spec.chip))
                 prog = self.engine.register(
-                    ServeProgram(f"chip{d}.prog", d, tenant.devices))
+                    ServeProgram(f"chip{d}.prog", d, tenant.devices,
+                                 heartbeat_ps=heartbeat_ps,
+                                 suspect_threshold=suspect))
                 self.engine.register(Connection(f"chip{d}.bus")).plug(
                     prog.port("core")).plug(core.port("prog"))
                 self.engine.register(Connection(f"chip{d}.membus")).plug(
@@ -941,33 +1337,76 @@ class ServingSystem:
                         self.fabric.note_plan("all-to-all",
                                               float(s.a2a_bytes(b)),
                                               tuple(tenant.devices))
+                if recovery is not None:
+                    # rejoin reshard migrates KV on the nominal group
+                    self.fabric.note_plan(
+                        "all-to-all", float(recovery.migrate_chunk_bytes),
+                        tuple(tenant.devices))
+        for d in scenario.spares:
+            # A spare chip: full compute stack, one control port per
+            # tenant star (bound at claim time), idle until claimed.
+            core = self.engine.register(
+                TensorCore(f"chip{d}.core", spec.chip))
+            hbm = self.engine.register(
+                HbmController(f"chip{d}.hbm", spec.chip))
+            prog = self.engine.register(
+                ServeProgram(f"chip{d}.prog", d, (), spare=True,
+                             heartbeat_ps=heartbeat_ps,
+                             suspect_threshold=suspect))
+            self.engine.register(Connection(f"chip{d}.bus")).plug(
+                prog.port("core")).plug(core.port("prog"))
+            self.engine.register(Connection(f"chip{d}.membus")).plug(
+                core.port("hbm")).plug(hbm.port("cpu"))
+            coll_conn.plug(prog.port("coll"))
+            for tid, ctrl in enumerate(ctrl_conns):
+                ctrl.plug(prog.port(f"ctrl{tid}"))
+            if health_conn is not None:
+                health_conn.plug(prog.port("health"))
+            self.programs.append(prog)
+            self.cores.append(core)
+            self.hbms.append(hbm)
 
     def note_failover_plans(self, candidates: typing.Iterable[int]) -> None:
-        """Note the collective plans of every *degraded* group a recovery
-        could re-mesh to: for each tenant, its device group minus every
+        """Note the collective plans of every group a recovery could
+        re-mesh to: for each tenant, its device group minus every
         non-empty subset of ``candidates`` (the chips the fault plan can
-        kill).  Plans are consumed at run start -- the bounded scheduler
-        derives its strict-window edges from them -- so every group that
-        might form mid-run must be noted before ``engine.run()``.
-        Collective payloads are activation rows (tp-independent), so the
-        noted bytes match the degraded iterations bit-for-bit."""
+        kill), each optionally extended by claimed spares (at most one
+        spare per lost chip -- the monitor never over-claims).  Plans are
+        consumed at run start -- the bounded scheduler derives its
+        strict-window edges from them -- so every group that might form
+        mid-run must be noted before ``engine.run()``.  Collective
+        payloads are activation rows (tp-independent), so the noted
+        bytes match the re-meshed iterations bit-for-bit; each group
+        also gets the fixed-size KV-migration all-to-all chunk."""
         import itertools
+        spares = tuple(sorted(self.scenario.spares))
+        chunk = (float(self.policy.migrate_chunk_bytes)
+                 if self.policy is not None else None)
         for tenant in self.scenario.tenants:
-            cand = sorted(set(tenant.devices) & set(candidates))
-            for r in range(1, len(cand) + 1):
-                for gone in itertools.combinations(cand, r):
-                    group = tuple(d for d in tenant.devices
-                                  if d not in gone)
-                    if len(group) < 2:
-                        continue
-                    s = ServeSizing(tenant, tp=len(group))
-                    for b in range(1, tenant.slots + 1):
-                        self.fabric.note_plan("all-reduce",
-                                              float(s.ar_bytes(b)), group)
-                        if s.moe:
-                            self.fabric.note_plan("all-to-all",
-                                                  float(s.a2a_bytes(b)),
-                                                  group)
+            cand = sorted((set(tenant.devices) | set(spares))
+                          & set(candidates))
+            lost_orig = [d for d in cand if d in tenant.devices]
+            for r in range(1, len(lost_orig) + 1):
+                for gone in itertools.combinations(lost_orig, r):
+                    survivors = tuple(d for d in tenant.devices
+                                      if d not in gone)
+                    for ns in range(0, min(r, len(spares)) + 1):
+                        for claim in itertools.combinations(spares, ns):
+                            group = tuple(sorted(survivors + claim))
+                            if len(group) < 2:
+                                continue
+                            s = ServeSizing(tenant, tp=len(group))
+                            for b in range(1, tenant.slots + 1):
+                                self.fabric.note_plan(
+                                    "all-reduce", float(s.ar_bytes(b)),
+                                    group)
+                                if s.moe:
+                                    self.fabric.note_plan(
+                                        "all-to-all",
+                                        float(s.a2a_bytes(b)), group)
+                            if chunk is not None:
+                                self.fabric.note_plan("all-to-all",
+                                                      chunk, group)
 
     def run(self, until_s: float = None) -> int:
         for prog in self.programs:
@@ -1039,6 +1478,18 @@ class ServeReport:
         default_factory=list)     # per tenant: [start_s, end_s] pairs
     goodput_in_outage_rps: float = 0.0    # completions per tenant-second
     goodput_outside_outage_rps: float = 0.0
+    # -- stateful failover (spare pool + KV migration) --------------------
+    spare_claims: int = 0          # spares claimed for dead chips
+    spare_returns: int = 0         # spares handed back to the pool
+    migrated_bytes: int = 0        # KV shards moved over the fabric
+    prefill_saved_tokens: int = 0  # context resumed from migrated KV
+    prefill_recompute_tokens: int = 0   # context lost with dead shards
+    # capacity-weighted availability: min(1, members/nominal) integrated
+    # over the serving span, 0 inside outage windows -- a tenant held at
+    # 3/4 capacity scores 0.75 even while "available"
+    tenant_effective_availability: typing.List[float] = dataclasses.field(
+        default_factory=list)
+    fabric_traffic: dict = dataclasses.field(default_factory=dict)
     scheduler: str = "serial"
     executor: str = "none"
 
@@ -1062,6 +1513,36 @@ def resolve_recovery(recovery, deadline_s: float = None):
     if recovery is None:
         return RecoveryPolicy() if deadline_s else None
     return recovery
+
+
+def _effective_availability(cap_log, windows, nominal: int,
+                            span_ps: int) -> float:
+    """Integrate ``min(1, members/nominal)`` over ``[0, span_ps]``,
+    forcing 0 inside outage windows.  All-int accumulation (numerator
+    areas in device·ps) so the result is bit-identical regardless of
+    event-processing order."""
+    if not span_ps or nominal <= 0:
+        return 1.0
+    steps: typing.Dict[int, int] = {}
+    for t, n in cap_log:
+        steps[t] = n                         # same-stamp: last wins
+    stamps = sorted(steps)
+    area = 0
+    for i, t in enumerate(stamps):
+        if t >= span_ps:
+            break
+        end = stamps[i + 1] if i + 1 < len(stamps) else span_ps
+        end = min(end, span_ps)
+        if end <= t:
+            continue
+        seg = end - t
+        out = 0
+        for s, e in windows:
+            lo, hi = max(t, s), min(end, e)
+            if hi > lo:
+                out += hi - lo
+        area += min(nominal, steps[t]) * (seg - out)
+    return area / (nominal * span_ps)
 
 
 def _fault_candidates(faults: dict) -> set:
@@ -1174,6 +1655,7 @@ def run_serving(scenario: ServingScenario, spec: SystemSpec = None,
     # request stamp (done / dropped / arrival) -- trailing deadline
     # no-op events must not dilute availability.
     tenant_outage_s, tenant_avail, outage_windows = [], [], []
+    tenant_eff_avail = []
     in_out_done = out_done = 0
     in_out_span_ps = out_span_ps = 0
     for server in system.servers:
@@ -1188,6 +1670,8 @@ def run_serving(scenario: ServingScenario, spec: SystemSpec = None,
         tenant_outage_s.append(ps_to_s(outage_ps))
         tenant_avail.append(1.0 - outage_ps / span_ps if span_ps else 1.0)
         outage_windows.append([[ps_to_s(s), ps_to_s(e)] for s, e in windows])
+        tenant_eff_avail.append(_effective_availability(
+            server._cap_log, windows, len(server.tenant.devices), span_ps))
         in_out_span_ps += outage_ps
         out_span_ps += span_ps - outage_ps
         for rec in server.recs.values():
@@ -1242,6 +1726,15 @@ def run_serving(scenario: ServingScenario, spec: SystemSpec = None,
                                if in_out_span_ps else 0.0),
         goodput_outside_outage_rps=(out_done / ps_to_s(out_span_ps)
                                     if out_span_ps else 0.0),
+        spare_claims=sum(s.spare_claims for s in system.servers),
+        spare_returns=sum(s.spare_returns for s in system.servers),
+        migrated_bytes=sum(s.migrated_bytes for s in system.servers),
+        prefill_saved_tokens=sum(s.prefill_saved_tokens
+                                 for s in system.servers),
+        prefill_recompute_tokens=sum(s.prefill_recompute_tokens
+                                     for s in system.servers),
+        tenant_effective_availability=tenant_eff_avail,
+        fabric_traffic=system.fabric.traffic_report(),
         scheduler=system.engine.scheduler.name,
         executor=(system.engine.scheduler.executor.name
                   if getattr(system.engine.scheduler, "executor", None)
@@ -1274,11 +1767,15 @@ def build_scenario(spec: SystemSpec, name: str = "serving",
                    prompt_range: typing.Tuple[int, int] = (16, 64),
                    decode_range: typing.Tuple[int, int] = (4, 12),
                    moe: bool = False,
-                   model: ModelConfig = None) -> typing.Optional[ServingScenario]:
+                   model: ModelConfig = None,
+                   spares: int = 0) -> typing.Optional[ServingScenario]:
     """Place ``tenants`` tenants on contiguous row-blocks of pod 0 and
-    attach seeded open-loop traces.  Returns None when pod 0 hasn't a
-    row per tenant (sweep grids skip the combo, same contract as the
-    collective scenario builders in tools/sweep.py)."""
+    attach seeded open-loop traces.  ``spares`` reserves that many chips
+    (the ones right after the tenant blocks, spilling into further pods)
+    for the HealthMonitor's shared failover pool.  Returns None when pod
+    0 hasn't a row per tenant, or the topology hasn't enough chips left
+    over for the spares (sweep grids skip the combo, same contract as
+    the collective scenario builders in tools/sweep.py)."""
     if arrival not in GENERATORS:
         raise ValueError(f"unknown arrival generator {arrival!r}; "
                          f"have {sorted(GENERATORS)}")
@@ -1286,6 +1783,10 @@ def build_scenario(spec: SystemSpec, name: str = "serving",
     rows_per = y // tenants
     if rows_per < 1:
         return None
+    first_free = tenants * rows_per * x
+    if spares and first_free + spares > spec.total_chips:
+        return None
+    spare_devs = tuple(range(first_free, first_free + spares))
     model = model or (_moe_model() if moe else _dense_model())
     specs = []
     for tid in range(tenants):
@@ -1297,4 +1798,5 @@ def build_scenario(spec: SystemSpec, name: str = "serving",
                              decode_range=decode_range)
         specs.append(TenantSpec(name=f"{name}.t{tid}", devices=devices,
                                 model=model, slots=slots, requests=reqs))
-    return ServingScenario(name=name, tenants=tuple(specs))
+    return ServingScenario(name=name, tenants=tuple(specs),
+                           spares=spare_devs)

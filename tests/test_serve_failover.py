@@ -1,0 +1,299 @@
+"""Stateful failover: spare-chip re-placement, KV migration /
+checkpointed prefill, quorum-based failure detection, capped backoff,
+and abort idempotence.  Complements tests/test_serve_sim.py (which pins
+the PR-9 detection -> re-mesh -> requeue behaviors); see docs/faults.md
+"Spare pool, migration & quorum"."""
+import pytest
+
+from repro.core import SystemSpec
+from repro.core.hooks import FaultInjector
+from repro.core.hw import s_to_ps
+from repro.serve.sim import (RecoveryPolicy, ServingSystem, build_scenario,
+                             run_serving, _fault_candidates)
+
+SMALL = SystemSpec(pod_shape=(2, 2))              # 2 tenants x 2 chips
+WIDE = SystemSpec(pod_shape=(2, 2), num_pods=2)   # room for spares
+DEADLINE = 5e-4
+KILL = {"chip1.prog": [(3e-3, "fail", None)]}
+
+SCHED_X_EXEC = [(s, e) for s in ("batch", "lookahead", "bounded")
+                for e in ("threads", "procs")]
+
+
+def _scenario(spec=SMALL, seed=3, rate=800.0, duration=0.006, **kw):
+    scen = build_scenario(spec, rate_rps=rate, duration_s=duration,
+                          seed=seed, **kw)
+    assert scen is not None
+    return scen
+
+
+def _run_system(scen, spec, faults, policy, until_s=None, **kw):
+    """White-box variant of run_serving: same fault wiring, returns the
+    ServingSystem so tests can inspect per-request records."""
+    system = ServingSystem(scen, spec, deadline_s=DEADLINE,
+                           recovery=policy, **kw)
+    plan = {name: [(s_to_ps(t), a, arg) for (t, a, arg) in acts]
+            for name, acts in faults.items()}
+    targets = (system.cores + system.programs + system.servers
+               + system.fabric.fault_targets())
+    inj = FaultInjector(plan)
+    for comp in targets:
+        comp.accept_hook(inj)
+    inj.arm(targets)
+    system.note_failover_plans(_fault_candidates(faults))
+    system.run(until_s=until_s)
+    return system
+
+
+# --------------------------------------------------------------------------
+# satellite: capped exponential backoff
+# --------------------------------------------------------------------------
+
+def test_backoff_ps_is_capped():
+    p = RecoveryPolicy(backoff_base_s=1e-4, backoff_max_s=3e-4)
+    delays = [p.backoff_ps(n) for n in range(1, 8)]
+    assert delays[0] == s_to_ps(1e-4)
+    assert delays[1] == s_to_ps(2e-4)
+    assert all(d == s_to_ps(3e-4) for d in delays[2:])   # capped
+    unbounded = RecoveryPolicy(backoff_base_s=1e-4, backoff_max_s=None)
+    assert unbounded.backoff_ps(10) == s_to_ps(1e-4 * 2 ** 9)
+
+
+def test_high_retry_requests_still_land_under_cap():
+    # two kills force repeated aborts; with the cap every retry lands
+    # well inside the trace horizon and nothing is stranded in backoff
+    plan = {"chip1.prog": [(2e-3, "fail", None)],
+            "chip2.prog": [(3e-3, "fail", None)]}
+    policy = RecoveryPolicy(max_retries=16, backoff_base_s=3e-4,
+                            backoff_max_s=6e-4)
+    rep = run_serving(_scenario(tenants=1), spec=SMALL, deadline_s=DEADLINE,
+                      recovery=policy, faults=plan)
+    assert rep.chip_deaths == 2
+    assert rep.dropped == 0                       # cap: retries all land
+    assert rep.completed == rep.offered
+    assert rep.in_flight == 0 and rep.queued == 0
+
+
+# --------------------------------------------------------------------------
+# satellite: idempotent abort on same-round duplicate verdicts
+# --------------------------------------------------------------------------
+
+def test_simultaneous_verdicts_do_not_double_penalize():
+    # both chips of a 4-wide tenant die at the same instant: the monitor
+    # declares them in one round, so two chip_dead verdicts land on the
+    # server at the same timestamp.  The second abort must not charge a
+    # retry to seats the first abort's re-admission just placed.
+    plan = {"chip1.prog": [(3e-3, "fail", None)],
+            "chip2.prog": [(3e-3, "fail", None)]}
+    sys = _run_system(_scenario(spec=SMALL, tenants=1), SMALL, plan,
+                      RecoveryPolicy())
+    server = sys.servers[0]
+    assert len(server.dead) == 2
+    # every request resolved, and no record was penalized twice for the
+    # one (double-verdict) abort event
+    for rec in server.recs.values():
+        assert rec.done_ps is not None or rec.dropped_ps is not None
+        assert rec.retries <= 1
+
+
+# --------------------------------------------------------------------------
+# satellite: second failure during recovery + 12-way identity
+# --------------------------------------------------------------------------
+
+SECOND_KILL = {"chip1.prog": [(3e-3, "fail", None)],
+               "chip2.prog": [(3.4e-3, "fail", None)]}  # inside backoff
+
+
+def _second_failure_oracle(fabric):
+    return run_serving(_scenario(tenants=1), spec=SMALL, fabric=fabric,
+                       deadline_s=DEADLINE, recovery=True,
+                       faults=SECOND_KILL)
+
+
+_second_oracles: dict = {}
+
+
+def _second_oracle(fabric):
+    if fabric not in _second_oracles:
+        _second_oracles[fabric] = _second_failure_oracle(fabric)
+    return _second_oracles[fabric]
+
+
+def test_second_failure_during_recovery_no_stuck_requests():
+    rep = _second_oracle("analytic")
+    assert rep.chip_deaths == 2
+    assert rep.completed + rep.dropped == rep.offered
+    assert rep.in_flight == 0 and rep.queued == 0
+
+
+@pytest.mark.parametrize("fabric", ("analytic", "event"))
+@pytest.mark.parametrize("sched,executor", SCHED_X_EXEC)
+def test_second_failure_bit_identity(sched, executor, fabric):
+    oracle = _second_oracle(fabric)
+    rep = run_serving(_scenario(tenants=1), spec=SMALL, fabric=fabric,
+                      scheduler=sched, executor=executor,
+                      deadline_s=DEADLINE, recovery=True,
+                      faults=SECOND_KILL)
+    assert rep.summary() == oracle.summary()
+
+
+# --------------------------------------------------------------------------
+# spare pool: claim, capacity restore, return on rejoin
+# --------------------------------------------------------------------------
+
+def _spare_scenario(**kw):
+    return _scenario(spec=WIDE, spares=1, **kw)
+
+
+def test_spare_requires_policy():
+    with pytest.raises(ValueError):
+        ServingSystem(_spare_scenario(), WIDE)
+
+
+def test_spare_claim_restores_capacity_and_availability():
+    no_spare = run_serving(_scenario(spec=WIDE), spec=WIDE,
+                           deadline_s=DEADLINE, recovery=True, faults=KILL)
+    spare = run_serving(_spare_scenario(), spec=WIDE,
+                        deadline_s=DEADLINE, recovery=True, faults=KILL)
+    assert spare.chip_deaths == 1
+    assert spare.spare_claims == 1 and spare.spare_returns == 0
+    assert no_spare.spare_claims == 0
+    # the claimed spare re-fills the mesh: capacity-weighted
+    # availability strictly improves over serving degraded at 1/2
+    assert (spare.tenant_effective_availability[0]
+            > no_spare.tenant_effective_availability[0])
+    # untouched tenant is perfect either way
+    assert spare.tenant_effective_availability[1] == 1.0
+    assert spare.completed == spare.offered
+    assert spare.migrated_bytes > 0               # shards moved to the spare
+
+
+def test_spare_returned_on_rejoin():
+    rejoin = {"chip1.prog": [(2e-3, "fail", None), (4e-3, "recover", None)]}
+    rep = run_serving(_spare_scenario(), spec=WIDE, deadline_s=DEADLINE,
+                      recovery=True, faults=rejoin)
+    assert rep.chip_deaths == 1 and rep.rejoins == 1
+    assert rep.spare_claims == 1
+    assert rep.spare_returns == 1                 # pool made whole
+    assert rep.completed == rep.offered
+    assert rep.in_flight == 0 and rep.queued == 0
+
+
+def test_killing_the_claimed_spare_still_drains():
+    # second failure lands on the freshly claimed spare itself: the pool
+    # is empty, so the tenant re-meshes degraded -- nothing sticks
+    plan = {"chip1.prog": [(3e-3, "fail", None)],
+            "chip4.prog": [(4.2e-3, "fail", None)]}
+    rep = run_serving(_spare_scenario(tenants=1), spec=WIDE,
+                      deadline_s=DEADLINE, recovery=True, faults=plan)
+    assert rep.chip_deaths == 2
+    assert rep.spare_claims >= 1
+    assert rep.completed + rep.dropped == rep.offered
+    assert rep.in_flight == 0 and rep.queued == 0
+
+
+@pytest.mark.parametrize("fabric", ("analytic", "event"))
+@pytest.mark.parametrize("sched,executor", SCHED_X_EXEC)
+def test_spare_failover_bit_identity(sched, executor, fabric):
+    key = ("spare", fabric)
+    if key not in _second_oracles:
+        _second_oracles[key] = run_serving(
+            _spare_scenario(), spec=WIDE, fabric=fabric,
+            deadline_s=DEADLINE, recovery=True, faults=KILL)
+    oracle = _second_oracles[key]
+    rep = run_serving(_spare_scenario(), spec=WIDE, fabric=fabric,
+                      scheduler=sched, executor=executor,
+                      deadline_s=DEADLINE, recovery=True, faults=KILL)
+    assert rep.summary() == oracle.summary()
+
+
+# --------------------------------------------------------------------------
+# KV migration / checkpointed prefill
+# --------------------------------------------------------------------------
+
+def test_migration_saves_prefill_and_breakdown_stays_exact():
+    sys = _run_system(_scenario(tenants=1), SMALL, KILL, RecoveryPolicy())
+    server = sys.servers[0]
+    assert server.prefill_saved_tokens > 0        # checkpoints migrated
+    assert server.prefill_recompute_tokens > 0    # the dead shard's slice
+    assert server.migrated_bytes > 0              # priced fabric transfer
+    for rec in server.recs.values():
+        if rec.done_ps is None:
+            continue
+        q = rec.admit_ps - rec.arrival_ps
+        p = rec.first_ps - rec.admit_ps
+        d = rec.done_ps - rec.first_ps
+        assert q >= 0 and p > 0 and d >= 0
+        assert q + p + d == rec.done_ps - rec.arrival_ps  # int-exact
+
+
+def test_migration_traffic_visible_in_fabric_report():
+    rep = run_serving(_scenario(tenants=1), spec=SMALL, deadline_s=DEADLINE,
+                      recovery=True, faults=KILL)
+    healthy = run_serving(_scenario(tenants=1), spec=SMALL)
+    assert rep.migrated_bytes > 0
+    # migration rides all-to-all chunks on a dense tenant that has none
+    assert rep.fabric_traffic.get("all-to-all", 0) > 0
+    assert healthy.fabric_traffic.get("all-to-all", 0) == 0
+
+
+def test_healthy_run_unchanged_by_failover_layer():
+    # no faults: checkpointing must not change a single timestamp
+    base = run_serving(_scenario(), spec=SMALL)
+    assert base.prefill_saved_tokens == 0
+    assert base.migrated_bytes == 0
+    assert base.spare_claims == 0
+    assert base.completed == base.offered
+
+
+# --------------------------------------------------------------------------
+# quorum detection
+# --------------------------------------------------------------------------
+
+def test_quorum_unreachable_keeps_suspect_alive():
+    # 2-chip tenant: a dead chip can gather at most 2 accusers (its peer
+    # + the tenant server); quorum=3 is unreachable, so the chip is
+    # never fenced -- the partitioned-but-alive scenario.  The tenant
+    # stalls (every iteration times out), so run to a horizon.
+    policy = RecoveryPolicy(quorum=3, max_retries=2)
+    rep = run_serving(_scenario(), spec=SMALL, deadline_s=DEADLINE,
+                      recovery=policy, faults=KILL, until_s=0.012)
+    assert rep.chip_deaths == 0                   # evidence below quorum
+    assert rep.collective_timeouts >= 1
+    assert rep.dropped > 0                        # retries burn out instead
+
+
+def test_quorum_reachable_fences_the_chip():
+    policy = RecoveryPolicy(quorum=2)
+    rep = run_serving(_scenario(), spec=SMALL, deadline_s=DEADLINE,
+                      recovery=policy, faults=KILL)
+    assert rep.chip_deaths == 1
+    assert rep.completed == rep.offered
+    assert rep.in_flight == 0 and rep.queued == 0
+
+
+def test_default_quorum_is_peer_majority():
+    p = RecoveryPolicy()
+    rep = run_serving(_scenario(tenants=1), spec=SMALL, deadline_s=DEADLINE,
+                      recovery=p, faults=KILL)
+    # 4-chip tenant: majority of 3 live peers = 2 accusers -- reachable
+    # through gossip + the coordinator's timeout roster
+    assert rep.chip_deaths == 1
+    assert rep.completed + rep.dropped == rep.offered
+
+
+def test_slow_quorum_still_reconciles_unseated_checkpoints():
+    # With quorum=2 the verdict lags the first coll_failed abort, so the
+    # interrupted request is in backoff (not seated) when the chip is
+    # finally fenced.  Its checkpoint still loses the dead chip's shard:
+    # the lost fraction is recomputed and the survivors' share is priced
+    # as migration -- no free full-checkpoint resume on the new mesh.
+    scen = build_scenario(WIDE, rate_rps=600.0, duration_s=0.02, seed=11,
+                          spares=1)
+    faults = {"chip1.prog": [(5e-3, "fail", None)]}
+    rep = run_serving(scen, spec=WIDE, deadline_s=DEADLINE,
+                      recovery=RecoveryPolicy(quorum=2), faults=faults)
+    assert rep.chip_deaths == 1 and rep.spare_claims == 1
+    assert rep.prefill_recompute_tokens > 0       # lost shard recomputed
+    assert rep.migrated_bytes > 0                 # surviving share priced
+    assert rep.completed + rep.dropped == rep.offered

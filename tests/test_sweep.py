@@ -253,3 +253,44 @@ def test_serving_recovery_grid_runs_with_recovery_columns():
     assert row["tenant_availability"][0] < 1.0
     assert row["tenant_availability"][1] == 1.0
     assert row["completed"] + row["dropped"] == row["offered"]
+
+
+# -- stateful-failover grid (ISSUE 10) ---------------------------------------
+
+def test_serving_spare_grid_runs_with_failover_columns():
+    assert {"double_kill", "spare_kill"} <= set(sweep.FAULT_PLANS)
+    grid = {**sweep.GRIDS["serving_spare"],
+            "scenario": ["serving_spare"], "scheduler": ["serial"],
+            "fabric": ["analytic"], "faults": ["chip_kill"],
+            "policy": ["default"]}
+    cfg = sweep.expand_grid(grid)[0]
+    assert "policy" not in cfg          # default preset adds no key
+    row = sweep.run_config(cfg)
+    assert "error" not in row
+    assert row["policy"] == "default"
+    assert row["chip_deaths"] == 1
+    assert row["spare_claims"] == 1
+    assert row["migrated_bytes"] > 0
+    assert row["prefill_saved_tokens"] > 0
+    assert row["completed"] + row["dropped"] == row["offered"]
+    assert 0.0 < row["tenant_effective_availability"][0] <= 1.0
+
+
+def test_policy_axis_expands_and_rejects_unknown():
+    grid = {**sweep.GRIDS["serving_spare"],
+            "scenario": ["serving_spare"], "scheduler": ["serial"],
+            "fabric": ["analytic"], "faults": ["chip_kill"],
+            "policy": ["default", "quorum2"]}
+    cfgs = sweep.expand_grid(grid)
+    assert len(cfgs) == 2
+    assert {c.get("policy") for c in cfgs} == {None, "quorum2"}
+    assert len({c["config_id"] for c in cfgs}) == 2
+    with pytest.raises(ValueError):
+        sweep.expand_grid({**grid, "policy": ["warp_quorum"]})
+
+
+def test_spare_kill_plan_needs_a_spare_chip():
+    assert sweep._faults_spare_kill(sweep.TOPOLOGIES["pod2x2"](),
+                                    "analytic") is None
+    assert sweep._faults_spare_kill(sweep.TOPOLOGIES["pod2x2x2"](),
+                                    "analytic") is not None

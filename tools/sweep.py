@@ -203,6 +203,22 @@ def scenario_serving_moe(spec: SystemSpec):
                                     duration_s=0.02, seed=11, moe=True)
 
 
+def scenario_serving_spare(spec: SystemSpec):
+    """The poisson pair plus one reserved spare chip: a chip-kill plan
+    exercises spare claim + KV migration (docs/faults.md "Spare pool,
+    migration & quorum").  None when no chip is left over."""
+    return serve_sim.build_scenario(spec, name="serving_spare",
+                                    arrival="poisson", rate_rps=600.0,
+                                    duration_s=0.02, seed=11, spares=1)
+
+
+def scenario_serving_spare2(spec: SystemSpec):
+    """Two shared spares: survives a double kill at full capacity."""
+    return serve_sim.build_scenario(spec, name="serving_spare2",
+                                    arrival="poisson", rate_rps=600.0,
+                                    duration_s=0.02, seed=11, spares=2)
+
+
 SCENARIOS = {
     "allreduce_ladder": scenario_allreduce_ladder,
     "ring_exchange": scenario_ring_exchange,
@@ -214,6 +230,8 @@ SCENARIOS = {
     "serving_burst": scenario_serving_burst,
     "serving_diurnal": scenario_serving_diurnal,
     "serving_moe": scenario_serving_moe,
+    "serving_spare": scenario_serving_spare,
+    "serving_spare2": scenario_serving_spare2,
 }
 
 
@@ -223,6 +241,7 @@ def _chip(**kw) -> ChipSpec:
 
 TOPOLOGIES = {
     "pod2x2": lambda: SystemSpec(pod_shape=(2, 2)),
+    "pod2x2x2": lambda: SystemSpec(pod_shape=(2, 2), num_pods=2),
     "pod4x4": lambda: SystemSpec(pod_shape=(4, 4)),
     "pod4x4x2": lambda: SystemSpec(pod_shape=(4, 4), num_pods=2),
     "pod8x8": lambda: SystemSpec(pod_shape=(8, 8)),
@@ -271,6 +290,22 @@ def _faults_chip_kill_rejoin(spec, fabric):
     return {"chip1.prog": [(5e-3, "fail", None), (1.2e-2, "recover", None)]}
 
 
+def _faults_double_kill(spec, fabric):
+    """A second chip dies while the first failure is still recovering:
+    the stateful-failover stress case (spares drain one by one)."""
+    return {"chip1.prog": [(5e-3, "fail", None)],
+            "chip2.prog": [(8e-3, "fail", None)]}
+
+
+def _faults_spare_kill(spec, fabric):
+    """Kill chip1, then kill the spare (chip4) its tenant claimed.  Only
+    meaningful where chip4 exists and is the first pool spare."""
+    if spec.total_chips <= 4:
+        return None
+    return {"chip1.prog": [(5e-3, "fail", None)],
+            "chip4.prog": [(9e-3, "fail", None)]}
+
+
 FAULT_PLANS = {
     "none": _faults_none,
     "straggler_chip": _faults_straggler_chip,
@@ -278,6 +313,19 @@ FAULT_PLANS = {
     "transient_link": _faults_transient_link,
     "chip_kill": _faults_chip_kill,
     "chip_kill_rejoin": _faults_chip_kill_rejoin,
+    "double_kill": _faults_double_kill,
+    "spare_kill": _faults_spare_kill,
+}
+
+
+# Named recovery-policy presets (the "policy" grid axis).  "default"
+# adds no config key, so pre-existing grids keep their config hashes.
+POLICY_PRESETS = {
+    "default": {},
+    "quorum1": {"quorum": 1},
+    "quorum2": {"quorum": 2},
+    "quorum3": {"quorum": 3},
+    "no_backoff_cap": {"backoff_max_s": None},
 }
 
 
@@ -315,6 +363,21 @@ GRIDS = {
         "sim": {"device_limit": None, "repeat_cap": 4,
                 "deadline_s": 5e-4, "recovery": True},
     },
+    # stateful failover: spares x quorum x kill plans on a topology with
+    # room for a shared pool; rows carry migrated_bytes / spare_claims /
+    # effective availability (docs/faults.md "Spare pool, migration &
+    # quorum")
+    "serving_spare": {
+        "scenario": ["serving_poisson", "serving_spare", "serving_spare2"],
+        "topology": ["pod2x2x2"],
+        "scheduler": ["serial", "bounded"],
+        "fabric": ["analytic", "event"],
+        "faults": ["chip_kill", "chip_kill_rejoin", "double_kill",
+                   "spare_kill"],
+        "policy": ["default", "quorum2"],
+        "sim": {"device_limit": None, "repeat_cap": 4,
+                "deadline_s": 5e-4, "recovery": True},
+    },
     # the fleet sweep: thousands of scenario points per CI run is the
     # point, but the checked-in preset stays tractable on one host
     "full": {
@@ -345,6 +408,7 @@ def expand_grid(grid: dict) -> typing.List[dict]:
     """
     spec = {**GRIDS["quick"], **grid}
     sim = {**GRIDS["quick"]["sim"], **(grid.get("sim") or {})}
+    policies = list(spec.get("policy") or ["default"])
     for axis, known in (("scenario", SCENARIOS), ("topology", TOPOLOGIES),
                         ("scheduler", SCHEDULERS), ("fabric", FABRICS),
                         ("faults", FAULT_PLANS)):
@@ -352,6 +416,10 @@ def expand_grid(grid: dict) -> typing.List[dict]:
         if unknown:
             raise ValueError(f"unknown {axis} values {sorted(unknown)}; "
                              f"known: {sorted(known)}")
+    unknown = set(policies) - set(POLICY_PRESETS)
+    if unknown:
+        raise ValueError(f"unknown policy values {sorted(unknown)}; "
+                         f"known: {sorted(POLICY_PRESETS)}")
     configs = []
     for scen in spec["scenario"]:
         for topo in spec["topology"]:
@@ -363,11 +431,16 @@ def expand_grid(grid: dict) -> typing.List[dict]:
                     for fault in spec["faults"]:
                         if FAULT_PLANS[fault](sys_spec, fabric) is None:
                             continue          # plan needs another fabric
-                        cfg = {"scenario": scen, "topology": topo,
-                               "scheduler": sched, "fabric": fabric,
-                               "faults": fault, "sim": dict(sim)}
-                        cfg["config_id"] = config_id(cfg)
-                        configs.append(cfg)
+                        for pol in policies:
+                            cfg = {"scenario": scen, "topology": topo,
+                                   "scheduler": sched, "fabric": fabric,
+                                   "faults": fault, "sim": dict(sim)}
+                            if pol != "default":
+                                # "default" adds no key, so grids that
+                                # predate the axis keep their hashes
+                                cfg["policy"] = pol
+                            cfg["config_id"] = config_id(cfg)
+                            configs.append(cfg)
     return configs
 
 
@@ -383,7 +456,7 @@ def grid_size(grid: dict) -> int:
     n = 1
     for axis in ("scenario", "topology", "scheduler", "fabric", "faults"):
         n *= len(spec[axis])
-    return n
+    return n * len(spec.get("policy") or ["default"])
 
 
 # --------------------------------------------------------------------------
@@ -406,17 +479,22 @@ def run_config(cfg: dict) -> dict:
     before = plancache.stats()
     t0 = time.perf_counter()
     if isinstance(cost, serve_sim.ServingScenario):
+        pol_name = cfg.get("policy", "default")
+        recovery = cfg["sim"].get("recovery")
+        if recovery and pol_name != "default":
+            recovery = serve_sim.RecoveryPolicy(**POLICY_PRESETS[pol_name])
         rep = serve_sim.run_serving(cost, spec=spec,
                                     scheduler=cfg["scheduler"],
                                     fabric=cfg["fabric"],
                                     faults=faults or None,
                                     deadline_s=cfg["sim"].get("deadline_s"),
-                                    recovery=cfg["sim"].get("recovery"))
+                                    recovery=recovery)
         wall = time.perf_counter() - t0
         after = plancache.stats()
         return {
             **{k: cfg[k] for k in ("config_id", "scenario", "topology",
                                    "scheduler", "fabric", "faults")},
+            "policy": pol_name,
             "time_s": rep.time_s,
             "wall_s": round(wall, 4),
             "events": rep.events,
@@ -437,6 +515,13 @@ def run_config(cfg: dict) -> dict:
             "rejoins": rep.rejoins,
             "chip_deaths": rep.chip_deaths,
             "tenant_availability": rep.tenant_availability,
+            "tenant_effective_availability":
+                rep.tenant_effective_availability,
+            "spare_claims": rep.spare_claims,
+            "spare_returns": rep.spare_returns,
+            "migrated_bytes": rep.migrated_bytes,
+            "prefill_saved_tokens": rep.prefill_saved_tokens,
+            "prefill_recompute_tokens": rep.prefill_recompute_tokens,
             "plan_lookups": after["lookups"] - before["lookups"],
             "plan_misses": after["misses"] - before["misses"],
         }
@@ -697,6 +782,7 @@ def main(argv=None) -> int:
                           "schedulers": list(SCHEDULERS),
                           "fabrics": list(FABRICS),
                           "fault_plans": sorted(FAULT_PLANS),
+                          "policies": sorted(POLICY_PRESETS),
                           "grids": GRIDS}, indent=2))
         return 0
     if args.cmd == "query":
